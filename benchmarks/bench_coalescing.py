@@ -1,0 +1,69 @@
+"""C2 — task-coalescing (steal-chunk) size sweep (paper Fig. 4).
+
+The paper's task-group size maps to ``steal_chunk`` (entries per steal —
+each entry already coalesces all siblings of one tree node).  Expected, per
+the paper: small groups (≈4) minimize makespan; very large groups strand big
+subtrees on one worker and *increase* steals/makespan.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import EngineConfig
+
+CHUNKS = (1, 2, 4, 8, 16)
+
+
+def run(scale: float = 0.5, seed: int = 7, workers: int = 16) -> Dict:
+    collections = common.bench_instances(scale=scale, seed=seed)
+    rows: List[Dict] = []
+    for cname, instances in collections.items():
+        cache: dict = {}
+        for chunk in CHUNKS:
+            cfg = EngineConfig(
+                n_workers=workers, expand_width=4,
+                steal_chunk=chunk, recv_cap=chunk, rebalance_interval=8,
+            )
+            steps, steals, states, walls = [], [], [], []
+            for inst in instances:
+                r = common.run_instance(inst, cfg=cfg, packed_cache=cache)
+                if r.states == 0:
+                    continue
+                steps.append(r.steps)
+                steals.append(r.steals)
+                states.append(r.states)
+                walls.append(r.wall_s)
+            rows.append(dict(
+                collection=cname, chunk=chunk,
+                total_steps=float(np.sum(steps)),
+                total_steals=float(np.sum(steals)),
+                total_states=float(np.sum(states)),
+                total_wall_s=float(np.sum(walls)),
+            ))
+    out = {"rows": rows}
+    common.save_json("coalescing", out)
+    return out
+
+
+def emit_csv(out: Dict) -> List[str]:
+    lines = []
+    base: Dict[str, float] = {}
+    for row in out["rows"]:
+        if row["chunk"] == 4:
+            base[row["collection"]] = row["total_steps"]
+    for row in out["rows"]:
+        rel = row["total_steps"] / max(base.get(row["collection"], 1), 1)
+        lines.append(common.csv_row(
+            f"coalescing/{row['collection']}/chunk{row['chunk']}",
+            row["total_wall_s"] * 1e6 / max(row["total_states"], 1),
+            f"steps_vs_chunk4={rel:.3f};steals={row['total_steals']:.0f}",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(emit_csv(run())))

@@ -1,0 +1,93 @@
+"""C3 — worker scaling (paper Tables 2/3): BSP speedup at 1/2/4/8/16 workers,
+split into short and long instances.
+
+Expected, per the paper: speedup grows with workers on long instances
+(5.96 / 5.21 / 9.49 at 16 workers on the three collections); short instances
+benefit little or regress.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import EngineConfig
+
+WORKERS = (1, 2, 4, 8, 16)
+LONG_THRESHOLD_STATES = 20_000  # "long-running" split (deterministic proxy
+# for the paper's 1-second wall-time split)
+
+
+def run(scale: float = 0.5, seed: int = 7) -> Dict:
+    collections = common.bench_instances(scale=scale, seed=seed)
+    out: Dict[str, Dict] = {}
+    for cname, instances in collections.items():
+        cache: dict = {}
+        # classify by single-worker states
+        base_cfg = EngineConfig(n_workers=1, expand_width=4)
+        base_runs = {i.name: common.run_instance(i, cfg=base_cfg, packed_cache=cache)
+                     for i in instances}
+        rows: List[Dict] = []
+        for v in WORKERS:
+            cfg = EngineConfig(n_workers=v, expand_width=4)
+            for inst in instances:
+                b = base_runs[inst.name]
+                if b.states == 0:
+                    continue
+                r = common.run_instance(inst, cfg=cfg, packed_cache=cache)
+                assert r.matches == b.matches, (inst.name, v)
+                rows.append(dict(
+                    instance=inst.name, workers=v, steps=r.steps,
+                    base_steps=b.steps, states=b.states,
+                    long=b.states >= LONG_THRESHOLD_STATES,
+                    speedup=b.steps / max(r.steps, 1),
+                ))
+        out[cname] = summarize(rows)
+        out[cname]["_rows"] = rows
+    common.save_json("scaling", out)
+    return out
+
+
+def summarize(rows: List[Dict]) -> Dict:
+    summary: Dict[str, Dict] = {}
+    for v in WORKERS:
+        vr = [r for r in rows if r["workers"] == v]
+        for split in ("all", "short", "long"):
+            sel = [
+                r for r in vr
+                if split == "all"
+                or (split == "long") == r["long"]
+            ]
+            if not sel:
+                continue
+            sp = np.array([r["speedup"] for r in sel])
+            tot_base = sum(r["base_steps"] for r in sel)
+            tot = sum(r["steps"] for r in sel)
+            summary.setdefault(split, {})[v] = {
+                "avg": float(tot_base / max(tot, 1)),  # aggregate (paper's avg)
+                "gmean": float(np.exp(np.mean(np.log(np.maximum(sp, 1e-9))))),
+                "max": float(sp.max()),
+                "n": len(sel),
+            }
+    return summary
+
+
+def emit_csv(out: Dict) -> List[str]:
+    lines = []
+    for cname, summ in out.items():
+        for split in ("all", "short", "long"):
+            if split not in summ:
+                continue
+            for v, s in summ[split].items():
+                lines.append(common.csv_row(
+                    f"scaling/{cname}/{split}/w{v}", 0.0,
+                    f"avg={s['avg']:.2f};gmean={s['gmean']:.2f};"
+                    f"max={s['max']:.2f};n={s['n']}",
+                ))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(emit_csv(run())))

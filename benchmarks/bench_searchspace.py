@@ -1,0 +1,81 @@
+"""C4/C5/C6 — search-space size and states/sec for RI-DS vs RI-DS-SI vs
+RI-DS-SI-FC (paper Figs. 7, 8, 9, 12).
+
+States-explored is deterministic, so this benchmark reproduces the paper's
+search-space claims exactly (up to the synthetic collections).  Expected,
+per the paper:
+  * SI reduces search space on all collections (C4);
+  * FC further reduces it on GRAEMLIN32-like inputs, neutral elsewhere (C5);
+  * time gains lag search-space gains (states/sec drops slightly — C6).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import EngineConfig
+
+VARIANTS = ("ri-ds", "ri-ds-si", "ri-ds-si-fc")
+
+
+def run(scale: float = 0.5, seed: int = 7) -> Dict:
+    cfg = EngineConfig(n_workers=1, expand_width=8)
+    collections = common.bench_instances(scale=scale, seed=seed)
+    rows: List[Dict] = []
+    out: Dict[str, Dict] = {}
+    for cname, instances in collections.items():
+        per_variant = {v: {"states": [], "wall": [], "matches": []} for v in VARIANTS}
+        cache: dict = {}
+        for inst in instances:
+            for v in VARIANTS:
+                r = common.run_instance(inst, variant=v, cfg=cfg, packed_cache=cache)
+                per_variant[v]["states"].append(r.states)
+                per_variant[v]["wall"].append(r.wall_s)
+                per_variant[v]["matches"].append(r.matches)
+        base_m = per_variant["ri-ds"]["matches"]
+        for v in VARIANTS:
+            assert per_variant[v]["matches"] == base_m, (
+                f"{cname}: {v} changed match counts — pruning must be sound"
+            )
+        summary = {}
+        for v in VARIANTS:
+            st = np.array(per_variant[v]["states"], dtype=np.float64)
+            wl = np.array(per_variant[v]["wall"], dtype=np.float64)
+            summary[v] = {
+                "mean_states": float(st.mean()),
+                "std_states": float(st.std()),
+                "total_states": float(st.sum()),
+                "total_wall_s": float(wl.sum()),
+                "states_per_sec": float(st.sum() / max(wl.sum(), 1e-9)),
+            }
+        out[cname] = summary
+        base = summary["ri-ds"]["total_states"]
+        for v in VARIANTS:
+            red = summary[v]["total_states"] / max(base, 1)
+            rows.append(dict(collection=cname, variant=v,
+                             states=summary[v]["total_states"],
+                             reduction_vs_rids=red,
+                             states_per_sec=summary[v]["states_per_sec"]))
+    out["_rows"] = rows
+    common.save_json("searchspace", out)
+    return out
+
+
+def emit_csv(out: Dict) -> List[str]:
+    lines = []
+    for row in out["_rows"]:
+        us = 1e6 / max(row["states_per_sec"], 1e-9)
+        lines.append(common.csv_row(
+            f"searchspace/{row['collection']}/{row['variant']}",
+            us,
+            f"states={row['states']:.0f};reduction={row['reduction_vs_rids']:.3f}",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(emit_csv(run())))

@@ -1,0 +1,102 @@
+"""C1/C7 — effect of work stealing with 16 workers (paper Fig. 3) and
+steal-depth behavior (the steal-from-the-back heuristic).
+
+Metrics (BSP methodology — benchmarks/common.py):
+  * step-count makespan with vs without stealing (paper: stealing gives
+    ~1.65× at 16 workers);
+  * per-worker states stddev (paper: high imbalance without stealing);
+  * mean depth of stolen entries (near-root expected — C7).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import EngineConfig
+
+
+def run(scale: float = 0.5, seed: int = 7, workers: int = 16) -> Dict:
+    collections = common.bench_instances(scale=scale, seed=seed)
+    rows: List[Dict] = []
+    for cname, instances in collections.items():
+        cache: dict = {}
+        for steal in (True, False):
+            cfg = EngineConfig(
+                n_workers=workers, expand_width=4, work_stealing=steal,
+                steal_chunk=4, rebalance_interval=8,
+            )
+            steps, stds, walls, steals, depths, states = [], [], [], [], [], []
+            for inst in instances:
+                r = common.run_instance(inst, cfg=cfg, packed_cache=cache)
+                if r.states == 0:
+                    continue
+                steps.append(r.steps)
+                stds.append(float(np.std(r.per_worker_states)) /
+                            max(float(np.mean(r.per_worker_states)), 1e-9))
+                walls.append(r.wall_s)
+                steals.append(r.steals)
+                states.append(r.states)
+            rows.append(dict(
+                collection=cname, stealing=steal,
+                total_steps=float(np.sum(steps)),
+                mean_worker_cv=float(np.mean(stds)),
+                total_wall_s=float(np.sum(walls)),
+                total_steals=float(np.sum(steals)),
+                total_states=float(np.sum(states)),
+            ))
+    # steal-depth experiment (C7): one long-ish instance per collection
+    depth_rows = []
+    for cname, instances in collections.items():
+        cache: dict = {}
+        best = max(instances, key=lambda i: i.pattern.m)
+        cfg = EngineConfig(n_workers=workers, expand_width=4)
+        r_ = common.run_instance(best, cfg=cfg, packed_cache=cache)
+        import repro.core.engine as eng
+        from repro.core import PackedGraph, build_plan
+        plan = build_plan(best.pattern, cache[id(best.target)], variant="ri-ds-si-fc")
+        res = eng.run(plan, cfg)
+        depth_rows.append(dict(
+            collection=cname, instance=best.name,
+            mean_steal_depth=res.mean_steal_depth,
+            mean_expand_depth=res.mean_expand_depth,
+            pattern_nodes=int(best.pattern.n),
+            steals=res.steals,
+        ))
+    out = {"stealing": rows, "steal_depth": depth_rows}
+    common.save_json("stealing", out)
+    return out
+
+
+def emit_csv(out: Dict) -> List[str]:
+    lines = []
+    by_coll: Dict[str, Dict[bool, Dict]] = {}
+    for row in out["stealing"]:
+        by_coll.setdefault(row["collection"], {})[row["stealing"]] = row
+    for cname, d in by_coll.items():
+        if True in d and False in d:
+            speed = d[False]["total_steps"] / max(d[True]["total_steps"], 1)
+            lines.append(common.csv_row(
+                f"stealing/{cname}",
+                d[True]["total_wall_s"] * 1e6 / max(d[True]["total_states"], 1),
+                f"bsp_speedup_from_stealing={speed:.2f};"
+                f"cv_with={d[True]['mean_worker_cv']:.3f};"
+                f"cv_without={d[False]['mean_worker_cv']:.3f};"
+                f"steals={d[True]['total_steals']:.0f}",
+            ))
+    for row in out["steal_depth"]:
+        # C7: stolen entries should sit closer to the root than the entries
+        # the owners are expanding (bottom-of-stack stealing)
+        lines.append(common.csv_row(
+            f"steal_depth/{row['collection']}", 0.0,
+            f"steal_depth={row['mean_steal_depth']:.2f};"
+            f"expand_depth={row['mean_expand_depth']:.2f};"
+            f"pattern_nodes={row['pattern_nodes']};steals={row['steals']}",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(emit_csv(run())))

@@ -1,0 +1,118 @@
+"""Shared benchmark machinery.
+
+CPU-measurement methodology (documented in EXPERIMENTS.md §Methodology):
+
+* **Search-space size** (paper Figs. 7/8/12): states-explored counters are
+  deterministic and hardware-independent — they reproduce the paper's
+  qualitative claims exactly.
+* **Parallel speedup** (paper Tables 2/3, Figs. 3/5/6): this container has
+  one CPU core, so wall-clock cannot show multi-worker speedup.  We report
+  the **BSP step-count speedup**: the engine advances all ``V`` workers in
+  lock-step, so the number of engine steps to drain the search space is the
+  parallel makespan under equal-step cost; ``speedup(V) = steps(V=1) /
+  steps(V)`` with the same per-worker expansion width.  Work stealing, task
+  coalescing, and worker-count effects all act through this quantity.
+  Wall-clock per state (states/sec) is additionally reported where the
+  comparison is same-configuration (C6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import EngineConfig, Graph, PackedGraph, build_plan
+from repro.core import engine as eng
+from repro.data import graphgen
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+@dataclasses.dataclass
+class InstanceRun:
+    name: str
+    matches: int
+    states: int
+    steps: int
+    steals: int
+    wall_s: float
+    per_worker_states: np.ndarray
+
+
+def run_instance(
+    inst: graphgen.Instance,
+    variant: str = "ri-ds-si-fc",
+    cfg: Optional[EngineConfig] = None,
+    packed_cache: Optional[dict] = None,
+) -> InstanceRun:
+    cfg = cfg or EngineConfig(n_workers=16, expand_width=4)
+    key = id(inst.target)
+    packed_cache = packed_cache if packed_cache is not None else {}
+    if key not in packed_cache:
+        packed_cache[key] = PackedGraph.from_graph(inst.target)
+    packed = packed_cache[key]
+    # pad position/parent dims to buckets so the jitted engine is reused
+    # across patterns against the same target (same W)
+    p_pad = max(16, ((inst.pattern.n + 15) // 16) * 16)
+    plan = build_plan(
+        inst.pattern, packed, variant=variant, p_pad=p_pad, max_parents=8
+    )
+    if not plan.satisfiable:
+        return InstanceRun(inst.name, 0, 0, 0, 0, 0.0, np.zeros(cfg.n_workers))
+    t0 = time.perf_counter()
+    res = eng.run(plan, cfg)
+    wall = time.perf_counter() - t0
+    return InstanceRun(
+        name=inst.name,
+        matches=res.matches,
+        states=res.states,
+        steps=res.steps,
+        steals=res.steals,
+        wall_s=wall,
+        per_worker_states=res.per_worker_states,
+    )
+
+
+def bench_instances(scale: float = 0.5, seed: int = 7) -> Dict[str, List[graphgen.Instance]]:
+    """The benchmark corpus: one scaled-down analogue per paper collection.
+
+    Pattern sizes follow the paper: 4–256 edges on the dense collections,
+    larger (sparser) patterns on PDBSv1 where RI's hard instances live."""
+    return {
+        "ppis32-like": graphgen.make_collection(
+            "ppis32-like", pattern_edges=(8, 16, 24), patterns_per_target=2,
+            scale=scale, seed=seed),
+        "graemlin32-like": graphgen.make_collection(
+            "graemlin32-like", pattern_edges=(8, 16, 24), patterns_per_target=2,
+            scale=scale, seed=seed + 1),
+        "pdbsv1-like": graphgen.make_collection(
+            "pdbsv1-like", pattern_edges=(16, 32, 48), patterns_per_target=2,
+            scale=scale, seed=seed + 2),
+    }
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_np_default)
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

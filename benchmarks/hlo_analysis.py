@@ -1,0 +1,107 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled HLO text: every instruction definition is indexed (name → shape →
+bytes), then each collective op's *operand* bytes are summed per collective
+kind.  Used by the dry-run recorder and §Roofline.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+# `%name = shape op-name(operands...)`
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}\/ ]+?))\s+([\w\-]+)(?:\.\d+)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of one (possibly tuple) HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind summed operand bytes of every collective instruction.
+
+    Returns ``{kind: bytes, ..., "total": bytes}`` (per-device program —
+    multiply by device count for fleet-wide traffic).
+    """
+    defs: Dict[str, int] = {}
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        nbytes = shape_bytes(shape_str)
+        defs[name] = nbytes
+        base_op = op
+        for kind in COLLECTIVE_KINDS:
+            if base_op == kind or base_op.startswith(kind + "-start"):
+                # operand list: text between the first '(' after op and ')'
+                try:
+                    args_part = line.split(op + "(", 1)[1]
+                except IndexError:
+                    args_part = ""
+                depth, buf = 1, []
+                for ch in args_part:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    buf.append(ch)
+                args = "".join(buf)
+                ops_bytes = 0
+                for om in _OPERAND_RE.finditer(args):
+                    ops_bytes += defs.get(om.group(1), 0)
+                if ops_bytes == 0:
+                    ops_bytes = nbytes  # fallback: output size
+                out[kind] += ops_bytes
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVE_KINDS)
+    return out
+
+
+def count_ops(hlo_text: str, op_names: Tuple[str, ...]) -> Dict[str, int]:
+    """Instruction count per op name (e.g. detecting redundant collectives)."""
+    counts = {k: 0 for k in op_names}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            op = m.group(3)
+            for k in op_names:
+                if op == k or op.startswith(k):
+                    counts[k] += 1
+    return counts

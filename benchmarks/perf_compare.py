@@ -1,0 +1,66 @@
+"""§Perf — before/after comparison between dry-run artifact directories.
+
+  PYTHONPATH=src python -m benchmarks.perf_compare [baseline_dir] [current_dir]
+
+Prints a per-cell markdown table of the three roofline terms before and
+after the optimization iterations, with the dominant-term delta highlighted.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks import roofline
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load(d: str):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            continue
+        out[rec["cell"]] = roofline.terms(rec)
+    return out
+
+
+def compare(base_dir: str, cur_dir: str, mesh: str = "single") -> str:
+    base = load(os.path.join(base_dir, mesh))
+    cur = load(os.path.join(cur_dir, mesh))
+    rows = []
+    for cell in sorted(set(base) | set(cur)):
+        b, c = base.get(cell), cur.get(cell)
+        if not b or not c:
+            continue
+        dom = b["dominant"]
+        key = f"t_{dom}" if dom != "collective" else "t_collective"
+        before = b[key]
+        after = c[key]
+        speed = before / max(after, 1e-30)
+        rows.append(
+            f"| {cell} | {dom} | {before:.3e} | {after:.3e} | {speed:7.2f}× "
+            f"| {b['roofline_fraction']:.4f} | {c['roofline_fraction']:.4f} |"
+        )
+    hdr = ("| cell | dominant(before) | term before (s) | term after (s) | Δ "
+           "| frac before | frac after |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main() -> None:
+    base_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(ART, "dryrun_baseline")
+    cur_dir = sys.argv[2] if len(sys.argv) > 2 else os.path.join(ART, "dryrun")
+    for mesh in ("single", "multi"):
+        if os.path.isdir(os.path.join(base_dir, mesh)) and os.path.isdir(
+            os.path.join(cur_dir, mesh)
+        ):
+            print(f"\n## {mesh} mesh\n")
+            print(compare(base_dir, cur_dir, mesh))
+
+
+if __name__ == "__main__":
+    main()

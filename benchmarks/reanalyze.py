@@ -1,0 +1,52 @@
+"""Re-run the HLO walker over archived .hlo.gz artifacts without recompiling.
+
+  PYTHONPATH=src python -m benchmarks.reanalyze [dir ...]
+
+Updates the ``hlo_walk`` section of each JSON in place — used whenever the
+accounting methodology improves (the compile results themselves are
+immutable).
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from benchmarks import hlo_walk
+
+DEFAULT_DIRS = [
+    os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun"),
+    os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun_baseline"),
+]
+
+
+def reanalyze_dir(d: str) -> int:
+    n = 0
+    for path in sorted(glob.glob(os.path.join(d, "**", "*.json"), recursive=True)):
+        gz = path.replace(".json", ".hlo.gz")
+        if not os.path.exists(gz):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        with gzip.open(gz, "rt") as f:
+            text = f.read()
+        rec["hlo_walk"] = hlo_walk.analyze(text)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        n += 1
+    return n
+
+
+def main() -> None:
+    dirs = sys.argv[1:] or DEFAULT_DIRS
+    for d in dirs:
+        if os.path.isdir(d):
+            n = reanalyze_dir(d)
+            print(f"[reanalyze] {d}: {n} cells updated")
+
+
+if __name__ == "__main__":
+    main()

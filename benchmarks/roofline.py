@@ -1,0 +1,155 @@
+"""§Roofline — three-term roofline from the dry-run artifacts.
+
+Terms (per cell, per mesh; v5e constants):
+  t_compute = flops_per_device / 197e12        (bf16 peak per chip)
+  t_memory  = bytes_per_device / 819e9         (HBM bandwidth per chip)
+  t_coll    = collective_bytes_per_device / 50e9  (ICI per-link bandwidth)
+
+Per-device values are the loop-corrected HLO-walk totals
+(benchmarks/hlo_walk.py) — XLA's cost_analysis visits scan bodies once and
+is reported alongside for reference.  Fleet totals = per-device × chips, so
+``t_compute == HLO_FLOPs_total / (chips × peak)`` exactly as specified.
+
+Also derived:
+  MODEL_FLOPS ratio = model_flops_total / (flops_per_device × chips)
+      (useful fraction of compiled compute; catches remat/dispatch waste)
+  roofline fraction = t_model / max(t_compute, t_memory, t_coll)
+      where t_model = model_flops_total / (chips × 197e12) — the score
+      reported in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+VPU_INT_OPS = 3.9e12  # ~int32 word-ops/s on the v5e VPU (8x128 lanes, ~1GHz,
+# 4 ALU slots) — used only for the zero-matmul SGE cells
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "dryrun", mesh, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("skipped"):
+        return None
+    chips = rec["n_devices"]
+    walk = rec["hlo_walk"]
+    f_dev = walk["flops"]
+    b_min = walk.get("bytes_min", walk.get("bytes_traffic", walk["bytes"]))
+    b_up = walk.get("bytes_traffic", walk["bytes"])
+    c_dev = walk["collective_total"]
+    # cells with zero dot-flops (the SGE engine is pure bitwise/int work)
+    # take their compute term from the analytic word-op count at VPU int
+    # throughput (~3.9e12 int-ops/s on v5e; documented approximation)
+    int_ops = f_dev == 0
+    t_c = (rec["model_flops"] / chips / VPU_INT_OPS) if int_ops else f_dev / PEAK_FLOPS
+    # memory term is bracketed: [fusion-optimal lower bound, CPU-backend
+    # boundary upper bound]; dominance / fractions use the lower bound (the
+    # realistic TPU estimate — TPU fuses elementwise chains the CPU HLO
+    # leaves at boundaries), the upper bound is reported alongside.
+    t_m = b_min / HBM_BW
+    t_m_up = b_up / HBM_BW
+    t_l = c_dev / ICI_BW
+    t_model = rec["model_flops"] / (chips * (VPU_INT_OPS if int_ops else PEAK_FLOPS))
+    bound = max(t_c, t_m, t_l, 1e-30)
+    dom = {t_c: "compute", t_m: "memory", t_l: "collective"}[max(t_c, t_m, t_l)]
+    return {
+        "cell": rec["cell"],
+        "kind": rec["kind"],
+        "chips": chips,
+        "t_compute": t_c,
+        "t_memory": t_m,
+        "t_memory_upper": t_m_up,
+        "t_collective": t_l,
+        "dominant": dom,
+        "model_flops": rec["model_flops"],
+        "hlo_flops_total": f_dev * chips,
+        "useful_ratio": (1.0 if int_ops
+                         else rec["model_flops"] / max(f_dev * chips, 1e-30)),
+        "roofline_fraction": t_model / bound,
+        "step_time_bound_s": bound,
+        "bytes_per_device": b_min,
+        "bytes_upper_per_device": b_up,
+        "bytes_xla_per_device": walk["bytes"],
+        "collective_per_device": c_dev,
+        "dynamic_loops": walk.get("n_dynamic_loops", 0),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+MOVE_HINTS = {
+    "compute": "raise arithmetic intensity / cut redundant recompute (remat "
+    "policy, fuse epilogues) or add chips",
+    "memory": "cut HBM traffic: larger fused blocks, bf16 intermediates, "
+    "avoid re-materialized activations, better layouts",
+    "collective": "re-shard to shrink cross-device traffic: move the sharded "
+    "axis, overlap collectives with compute, compress payloads",
+}
+
+
+def table(mesh: str = "single") -> str:
+    rows = []
+    for rec in load_cells(mesh):
+        t = terms(rec)
+        if t is None:
+            rows.append(
+                f"| {rec['cell']} | — | — | — | — | SKIP | — | — | {rec['skip_reason'][:60]}… |"
+            )
+            continue
+        rows.append(
+            "| {cell} | {t_compute:.2e} | {t_memory:.2e} | {t_collective:.2e} "
+            "| **{dominant}** | {model_flops:.2e} | {useful_ratio:.3f} "
+            "| {roofline_fraction:.3f} | {hint} |".format(
+                **t, hint=MOVE_HINTS[t["dominant"]][:70]
+            )
+        )
+    hdr = (
+        "| cell | t_compute (s) | t_memory (s) | t_coll (s) | dominant "
+        "| MODEL_FLOPS | useful ratio | roofline frac | to move the dominant term |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    return hdr + "\n" + "\n".join(rows)
+
+
+def emit_csv(mesh: str = "single") -> List[str]:
+    lines = []
+    for rec in load_cells(mesh):
+        t = terms(rec)
+        if t is None:
+            continue
+        lines.append(
+            f"roofline/{mesh}/{t['cell']},{t['step_time_bound_s']*1e6:.2f},"
+            f"dom={t['dominant']};frac={t['roofline_fraction']:.3f};"
+            f"useful={t['useful_ratio']:.3f}"
+        )
+    return lines
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        md = table(mesh)
+        path = os.path.join(ARTIFACTS, f"roofline_{mesh}.md")
+        with open(path, "w") as f:
+            f.write(f"# Roofline — {mesh} mesh\n\n{md}\n")
+        print(f"[roofline] wrote {path} ({len(cells)} cells)")
+        print("\n".join(emit_csv(mesh)))
+
+
+if __name__ == "__main__":
+    main()

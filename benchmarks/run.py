@@ -1,0 +1,70 @@
+"""Benchmark entrypoint — one section per paper table/figure.
+
+  ``PYTHONPATH=src python -m benchmarks.run [--scale S] [--quick]``
+
+Prints ``name,us_per_call,derived`` CSV rows per measurement and saves JSON
+artifacts under artifacts/bench/ for EXPERIMENTS.md.
+
+Sections:
+  searchspace — paper Figs. 7/8/9/12 (RI-DS vs -SI vs -SI-FC)
+  stealing    — paper Fig. 3 + steal-depth (C7)
+  coalescing  — paper Fig. 4 (task-group size)
+  scaling     — paper Tables 2/3 (worker sweep, short/long split)
+  roofline    — §Roofline summary from dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--quick", action="store_true", help="tiny instances")
+    ap.add_argument(
+        "--sections", default="searchspace,stealing,coalescing,scaling,roofline"
+    )
+    args = ap.parse_args()
+    scale = 0.15 if args.quick else args.scale
+    sections = args.sections.split(",")
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    if "searchspace" in sections:
+        from benchmarks import bench_searchspace
+
+        out = bench_searchspace.run(scale=scale)
+        print("\n".join(bench_searchspace.emit_csv(out)), flush=True)
+
+    if "stealing" in sections:
+        from benchmarks import bench_stealing
+
+        out = bench_stealing.run(scale=scale)
+        print("\n".join(bench_stealing.emit_csv(out)), flush=True)
+
+    if "coalescing" in sections:
+        from benchmarks import bench_coalescing
+
+        out = bench_coalescing.run(scale=scale)
+        print("\n".join(bench_coalescing.emit_csv(out)), flush=True)
+
+    if "scaling" in sections:
+        from benchmarks import bench_scaling
+
+        out = bench_scaling.run(scale=scale)
+        print("\n".join(bench_scaling.emit_csv(out)), flush=True)
+
+    if "roofline" in sections:
+        from benchmarks import roofline
+
+        roofline.main()
+
+    print(f"# total benchmark time: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: enumerate all isomorphic subgraphs with the parallel engine.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Builds a small labeled target graph, extracts a pattern, and runs all four
+algorithm variants (RI, RI-DS, RI-DS-SI, RI-DS-SI-FC) with 8 workers,
+printing matches / search-space size / steal statistics — the paper's core
+loop in ~20 lines of user code.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import enumerate_subgraphs
+from repro.data import graphgen
+
+# A PPI-flavored synthetic target: 400 nodes, dense, 32 labels.
+target = graphgen.random_graph(400, 3200, n_labels=32, label_dist="normal", seed=1)
+# A 16-edge pattern extracted from the target (=> at least one match exists).
+pattern = graphgen.extract_pattern(target, 16, seed=2)
+print(f"target: {target.n} nodes / {target.m} arcs; "
+      f"pattern: {pattern.n} nodes / {pattern.m} arcs\n")
+
+for variant in ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc"):
+    res = enumerate_subgraphs(
+        pattern, target, variant=variant,
+        n_workers=8, expand_width=4, steal_chunk=4,
+    )
+    print(f"{variant:12s} matches={res.matches:<6d} states={res.states:<8d} "
+          f"steps={res.steps:<6d} steals={res.steals:<4d} "
+          f"preprocess={res.preprocess_s*1e3:6.1f}ms match={res.match_s:6.2f}s")
+
+print("\nSearch-space (states) should shrink monotonically RI -> RI-DS-SI-FC;"
+      "\nmatch counts must be identical across variants.")

@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: atomic sharded store + elastic reshard."""
+
+from repro.checkpoint import store
+from repro.checkpoint.reshard import place
+
+__all__ = ["store", "place"]

@@ -1,0 +1,35 @@
+"""Elastic re-sharding: restore a checkpoint onto a different mesh.
+
+Checkpoints store *logical* (unsharded) arrays (store.py), so elasticity is
+a placement problem, not a data problem: given the restored host arrays and
+a new mesh, ``place`` produces jax arrays with shardings derived from the
+model's logical axes on the *new* mesh.  A job that loses a pod restarts on
+the smaller mesh with the same checkpoint; divisibility degradation (a dim no
+longer divisible by the new axis product) falls back to replication per
+`repro.distributed.shardings.logical_to_pspec`.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.shardings import named_sharding
+
+
+def place(host_tree: Any, logical_tree: Any, mesh: Mesh):
+    """Device-put a host pytree with shardings from logical axes on ``mesh``."""
+
+    def put(arr, logical):
+        sh = named_sharding(logical, arr.shape, mesh)
+        return jax.device_put(arr, sh)
+
+    return jax.tree.map(
+        put,
+        host_tree,
+        logical_tree,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple))
+        or (isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)),
+    )

@@ -1,0 +1,112 @@
+"""Architecture × shape cell registry.
+
+Every assigned architecture registers an :class:`Arch` with one
+:class:`Cell` per input shape; the dry-run (launch/dryrun.py), roofline
+(benchmarks/roofline.py) and smoke tests all walk this registry.
+
+A cell's ``build()`` returns the jit-able step function plus *abstract*
+arguments (ShapeDtypeStruct pytrees — never allocated) and matching
+logical-axis pytrees, so lowering works for trillion-parameter configs on a
+CPU host.  ``model_flops`` is the analytic useful-work estimate used for the
+MODEL_FLOPS / HLO_FLOPs ratio in §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CellBuild:
+    fn: Callable
+    args: Tuple[Any, ...]  # abstract args (pytrees of ShapeDtypeStruct)
+    logical: Tuple[Any, ...]  # logical-axis pytrees matching ``args``
+    model_flops: float
+    note: str = ""
+    donate: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode | serve | retrieval | engine
+    build: Optional[Callable[[], CellBuild]]
+    skip_reason: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+
+@dataclasses.dataclass
+class Arch:
+    name: str
+    family: str  # lm | gnn | recsys | sge
+    cfg: Any
+    cells: Dict[str, Cell]
+    smoke: Callable[[], Dict[str, float]]  # reduced-config forward/train step
+    notes: str = ""
+
+
+_REGISTRY: Dict[str, Arch] = {}
+
+ARCH_MODULES = [
+    "repro.configs.grok_1_314b",
+    "repro.configs.kimi_k2_1t_a32b",
+    "repro.configs.nemotron_4_15b",
+    "repro.configs.minitron_8b",
+    "repro.configs.stablelm_12b",
+    "repro.configs.gcn_cora",
+    "repro.configs.graphcast",
+    "repro.configs.schnet",
+    "repro.configs.graphsage_reddit",
+    "repro.configs.din",
+    "repro.configs.sge",  # the paper's own workload (bonus cells)
+]
+
+
+def register(arch: Arch) -> Arch:
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get(name: str) -> Arch:
+    load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def load_all() -> Dict[str, Arch]:
+    for mod in ARCH_MODULES:
+        importlib.import_module(mod)
+    return dict(_REGISTRY)
+
+
+def all_cells(include_skipped: bool = True) -> List[Cell]:
+    out: List[Cell] = []
+    for arch in load_all().values():
+        for cell in arch.cells.values():
+            if include_skipped or cell.build is not None:
+                out.append(cell)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by arch config modules
+# ---------------------------------------------------------------------------
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def abstract_dict(shapes: Dict[str, Tuple[Tuple[int, ...], Any]]):
+    """{name: (shape, dtype)} -> ({name: SDS}, template for logical)."""
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}

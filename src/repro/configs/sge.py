@@ -1,0 +1,115 @@
+"""sge — the paper's own workload as dry-run cells (bonus beyond the 40
+assigned cells).
+
+One cell per data collection, sized to the collection's largest target graph
+(Table 1 of the paper), lowering **one engine round** (``rebalance_interval``
+expansion steps + one steal round) under the production mesh:
+
+  * ``sge_ppis32``     n_t = 12,575  (dense PPI)
+  * ``sge_graemlin32`` n_t =  6,726  (dense microbial)
+  * ``sge_pdbsv1``     n_t = 33,067  (large sparse)
+
+Workers shard over ``('pod','data')`` (the paper's thread axis), packed
+bitmap words over ``'model'`` (tensor parallelism the paper did not have —
+DESIGN.md §2).  Bitmap words are padded to multiples of 128 so the tensor
+axis always divides.
+
+MODEL_FLOPS: useful bitwise word-lane ops per round =
+``R · V · E · W · (max_parents + 3)`` (dom ∧ ¬used ∧ parents, push/pop
+bookkeeping excluded), counted at 1 op per 32-bit word-lane.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.registry import Arch, Cell, CellBuild, round_up
+from repro.core import EngineConfig, Graph, enumerate_subgraphs
+from repro.core import engine as eng
+from repro.core.ref import brute_force_count, ref_enumerate
+from repro.data import graphgen
+
+P_PAD = 64  # pattern positions (paper patterns: up to 256 edges / ~128 nodes
+MAX_PARENTS = 8
+ENGINE = EngineConfig(
+    n_workers=64,
+    expand_width=64,
+    steal_chunk=4,  # the paper's best task-group size (Fig. 4)
+    rebalance_interval=8,
+    store_used=True,  # §Perf iter 7 tried recompute-from-mapping (False) and
+    # was REFUTED: the per-lane reconstruction loop costs more boundary
+    # traffic than the stored bitmap saves (memory term 0.47×; see
+    # EXPERIMENTS.md §Perf) — kept as a config option, default stored.
+)
+
+COLLECTION_NT = {
+    "sge_ppis32": 12575,
+    "sge_graemlin32": 6726,
+    "sge_pdbsv1": 33067,
+}
+
+
+def _w_for(n_t: int) -> int:
+    return round_up((n_t + 31) // 32, 128)
+
+
+def build_round(n_t: int, cfg: EngineConfig = ENGINE) -> CellBuild:
+    w = _w_for(n_t)
+    plan_abs = eng.abstract_plan_arrays(n_t, w, P_PAD, MAX_PARENTS)
+    state_abs = eng.abstract_engine_state(cfg, w, P_PAD)
+
+    def round_fn(plan, state):
+        return eng.make_round_fn(cfg, plan)(state)
+
+    flops = (
+        cfg.rebalance_interval
+        * cfg.n_workers
+        * cfg.expand_width
+        * w
+        * (MAX_PARENTS + 3)
+    )
+    return CellBuild(
+        fn=round_fn,
+        args=(plan_abs, state_abs),
+        logical=(eng.PLAN_LOGICAL, eng.STATE_LOGICAL),
+        model_flops=float(flops),
+        note=f"one engine round; n_t={n_t} w={w} V={cfg.n_workers} E={cfg.expand_width}",
+        donate=(1,),
+    )
+
+
+def smoke() -> Dict[str, float]:
+    """End-to-end enumeration on a generated PPI-like instance, verified
+    against both oracles."""
+    tgt = graphgen.random_graph(48, 160, n_labels=4, seed=3)
+    pat = graphgen.extract_pattern(tgt, 5, seed=4)
+    res = enumerate_subgraphs(
+        pat, tgt, variant="ri-ds-si-fc", n_workers=4, expand_width=4
+    )
+    ref = ref_enumerate(pat, tgt, variant="ri-ds-si-fc")
+    assert res.matches == ref.matches and res.states == ref.states, (
+        res.matches, res.states, ref.matches, ref.states,
+    )
+    assert res.matches >= 1  # extracted patterns always occur
+    return {"matches": float(res.matches), "states": float(res.states)}
+
+
+ARCH = registry.register(
+    Arch(
+        name="sge",
+        family="sge",
+        cfg=ENGINE,
+        cells={
+            name: Cell("sge", name, "engine", functools.partial(build_round, nt))
+            for name, nt in COLLECTION_NT.items()
+        },
+        smoke=smoke,
+        notes="The paper's contribution itself; see DESIGN.md §2 for the "
+        "work-stealing → SPMD mapping.",
+    )
+)

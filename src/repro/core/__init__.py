@@ -1,0 +1,29 @@
+"""Core subgraph-enumeration library (the paper's contribution).
+
+Layers:
+  graph      — host graph + packed-bitmap representations
+  ordering   — RI GreatestConstraintFirst ordering (+ SI tie-break)
+  domains    — RI-DS domains: init, arc consistency, forward checking
+  plan       — SearchPlan: static arrays for the engine
+  engine     — frontier-vectorized work-stealing search (jax)
+  scheduler  — steal-round policy (shared with the GNN batch balancer)
+  ref        — sequential + brute-force oracles
+  api        — enumerate_subgraphs()
+"""
+
+from repro.core.api import EnumerationResult, enumerate_subgraphs
+from repro.core.engine import EngineConfig, EngineResult
+from repro.core.graph import Graph, PackedGraph
+from repro.core.plan import SearchPlan, VARIANTS, build_plan
+
+__all__ = [
+    "EnumerationResult",
+    "enumerate_subgraphs",
+    "EngineConfig",
+    "EngineResult",
+    "Graph",
+    "PackedGraph",
+    "SearchPlan",
+    "VARIANTS",
+    "build_plan",
+]

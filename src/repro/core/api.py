@@ -1,0 +1,97 @@
+"""Public API for the subgraph-enumeration core.
+
+    from repro.core import enumerate_subgraphs
+    res = enumerate_subgraphs(pattern, target, variant="ri-ds-si-fc",
+                              n_workers=16)
+    print(res.matches, res.states)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Union
+
+from repro.core import engine as engine_mod
+from repro.core.engine import EngineConfig, EngineResult
+from repro.core.graph import Graph, PackedGraph
+from repro.core.plan import SearchPlan, build_plan
+
+
+@dataclasses.dataclass
+class EnumerationResult:
+    matches: int
+    states: int
+    steps: int
+    steals: int
+    steal_rounds: int
+    mean_steal_depth: float
+    preprocess_s: float
+    match_s: float
+    engine: EngineResult
+    plan: SearchPlan
+
+    @property
+    def total_s(self) -> float:
+        return self.preprocess_s + self.match_s
+
+
+def enumerate_subgraphs(
+    pattern: Graph,
+    target: Union[Graph, PackedGraph],
+    variant: str = "ri-ds-si-fc",
+    config: Optional[EngineConfig] = None,
+    **config_kwargs,
+) -> EnumerationResult:
+    """Enumerate all non-induced subgraphs of ``target`` isomorphic to
+    ``pattern``.
+
+    Args:
+      pattern: the (small) pattern graph.
+      target: the target graph; a pre-packed :class:`PackedGraph` is reused
+        across queries against the same target (the common case in the
+        paper's collections: thousands of patterns per target).
+      variant: ``ri`` | ``ri-ds`` | ``ri-ds-si`` | ``ri-ds-si-fc``.
+      config: engine configuration; keyword overrides accepted.
+    """
+    cfg = config or EngineConfig(**config_kwargs)
+    if config is not None and config_kwargs:
+        cfg = dataclasses.replace(config, **config_kwargs)
+
+    t0 = time.perf_counter()
+    packed = target if isinstance(target, PackedGraph) else PackedGraph.from_graph(target)
+    plan = build_plan(pattern, packed, variant=variant)
+    t1 = time.perf_counter()
+
+    if not plan.satisfiable:
+        empty = EngineResult(
+            matches=0, states=0, steps=0, steals=0, steal_rounds=0,
+            mean_steal_depth=0.0, mean_expand_depth=0.0,
+            per_worker_states=None,
+            per_worker_matches=None, overflow=False, match_buf=None,
+        )
+        return EnumerationResult(
+            matches=0, states=0, steps=0, steals=0, steal_rounds=0,
+            mean_steal_depth=0.0, preprocess_s=t1 - t0, match_s=0.0,
+            engine=empty, plan=plan,
+        )
+
+    res = engine_mod.run(plan, cfg)
+    t2 = time.perf_counter()
+    if res.overflow:
+        raise RuntimeError(
+            "engine stack overflow — increase EngineConfig.stack_cap "
+            f"(current auto={cfg.resolved_stack_cap(plan.p_pad)})"
+        )
+    return EnumerationResult(
+        matches=res.matches,
+        states=res.states,
+        steps=res.steps,
+        steals=res.steals,
+        steal_rounds=res.steal_rounds,
+        mean_steal_depth=res.mean_steal_depth,
+        preprocess_s=t1 - t0,
+        match_s=t2 - t1,
+        engine=res,
+        plan=plan,
+    )

@@ -1,0 +1,169 @@
+"""RI-DS domain assignment: initial compatibility domains, arc-consistency
+filtering, and the paper's singleton forward checking (FC).
+
+Domains are packed ``[n_p, w]`` uint32 bitmaps over target nodes — the same
+representation RI-DS uses ("domains are implemented as bitmasks", paper
+§4.2.2), which makes every filtering step a dense bitwise sweep.
+
+Pipeline (paper §4.1 / §4.2.2):
+
+  1. ``initial_domains``    — label equality + degree dominance.
+  2. ``arc_consistency``    — drop ``t`` from ``D(p)`` if some pattern edge
+     ``(p, q)`` has no counterpart ``(t, t')`` with ``t' ∈ D(q)`` and a
+     compatible edge label.  Iterated to a fixpoint (each removal can expose
+     more inconsistency).
+  3. ``forward_check_singletons`` — every pattern node with ``|D(p)| == 1``
+     *will* consume its target node; remove that node from all other domains,
+     repeating on newly created singletons.  Detects unsatisfiability when a
+     domain empties or two singletons collide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph, PackedGraph, bitmap_from_indices, n_words, popcount
+
+
+@dataclasses.dataclass
+class DomainResult:
+    """Packed domains plus satisfiability flag."""
+
+    bits: np.ndarray  # [n_p, w] uint32
+    satisfiable: bool
+
+    def sizes(self) -> np.ndarray:
+        return popcount(self.bits)
+
+
+def initial_domains(pattern: Graph, target: PackedGraph) -> np.ndarray:
+    """``D0(p) = { t : lab(t) == lab(p), deg_out(t) >= deg_out(p),
+    deg_in(t) >= deg_in(p) }`` as ``[n_p, w]`` bitmaps."""
+    p_out = pattern.out_degrees()
+    p_in = pattern.in_degrees()
+    w = target.w
+    bits = np.zeros((pattern.n, w), dtype=np.uint32)
+    for p in range(pattern.n):
+        ok = (
+            (target.labels == pattern.labels[p])
+            & (target.deg_out >= p_out[p])
+            & (target.deg_in >= p_in[p])
+        )
+        idx = np.nonzero(ok)[0]
+        if idx.size:
+            bits[p] = bitmap_from_indices(idx, target.n, w)
+    return bits
+
+
+def _pattern_arcs(pattern: Graph) -> np.ndarray:
+    """All directed constraint arcs ``(p, q, dir, elab)``.
+
+    For pattern edge ``(p -> q)`` with label ``l`` we emit two arcs:
+      * ``(p, q, dir=0, l)``: every ``t ∈ D(p)`` needs an out-edge with label
+        ``l`` to some ``t' ∈ D(q)``;
+      * ``(q, p, dir=1, l)``: every ``t ∈ D(q)`` needs an in-edge from some
+        ``t' ∈ D(p)``.
+    """
+    arcs = []
+    for u, v, l in zip(pattern.src.tolist(), pattern.dst.tolist(), pattern.edge_labels.tolist()):
+        if u == v:
+            continue
+        arcs.append((u, v, 0, l))
+        arcs.append((v, u, 1, l))
+    return np.asarray(arcs, dtype=np.int32).reshape(-1, 4)
+
+
+def arc_consistency(
+    pattern: Graph,
+    target: PackedGraph,
+    bits: np.ndarray,
+    max_iters: Optional[int] = None,
+) -> DomainResult:
+    """Filter domains to (iterated) arc consistency.
+
+    For arc ``(p, q, dir, l)``: keep ``t`` in ``D(p)`` only if
+    ``adj_bits[l, dir, t] & D(q)`` is non-empty — a row-wise AND + any-bit
+    test over the target adjacency bitmaps, vectorized over all ``t``.
+    """
+    bits = bits.copy()
+    arcs = _pattern_arcs(pattern)
+    if arcs.size == 0:
+        return DomainResult(bits, bool(np.all(popcount(bits) > 0)))
+    it = 0
+    while True:
+        it += 1
+        changed = False
+        for p, q, d, l in arcs.tolist():
+            rows = target.adj_bits[l, d]  # [n_t, w]
+            ok = np.any(rows & bits[q][None, :], axis=-1)  # [n_t] any neighbor in D(q)
+            mask = bitmap_from_indices(np.nonzero(ok)[0], target.n, target.w) if ok.any() else np.zeros(target.w, np.uint32)
+            nb = bits[p] & mask
+            if not np.array_equal(nb, bits[p]):
+                bits[p] = nb
+                changed = True
+                if not nb.any():
+                    return DomainResult(bits, False)
+        if not changed or (max_iters is not None and it >= max_iters):
+            break
+    return DomainResult(bits, bool(np.all(popcount(bits) > 0)))
+
+
+def forward_check_singletons(bits: np.ndarray) -> DomainResult:
+    """The paper's FC (§4.2.2): propagate injectivity from singleton domains.
+
+    Pattern nodes with ``|D(p)| == 1`` are guaranteed to be assigned their
+    single target node; remove that node from every *other* domain, and
+    iterate on newly created singletons.
+    """
+    bits = bits.copy()
+    n_p = bits.shape[0]
+    sizes = popcount(bits)
+    if np.any(sizes == 0):
+        return DomainResult(bits, False)
+    processed = np.zeros(n_p, dtype=bool)
+    while True:
+        new = np.nonzero((sizes == 1) & ~processed)[0]
+        if new.size == 0:
+            break
+        # Union bitmap of all newly discovered singleton targets.  Collision
+        # (two singletons sharing a target) surfaces as an emptied domain.
+        union = np.zeros(bits.shape[1], dtype=np.uint32)
+        for p in new.tolist():
+            if (union & bits[p]).any():
+                return DomainResult(bits, False)  # two singletons collide
+            union |= bits[p]
+            processed[p] = True
+        keep = ~processed
+        bits[keep] &= ~union[None, :]
+        sizes = popcount(bits)
+        if np.any(sizes == 0):
+            return DomainResult(bits, False)
+    return DomainResult(bits, True)
+
+
+def compute_domains(
+    pattern: Graph,
+    target: PackedGraph,
+    use_ac: bool = True,
+    use_fc: bool = False,
+    ac_iters: Optional[int] = None,
+) -> DomainResult:
+    """Full RI-DS domain pipeline.
+
+    ``use_ac=False`` yields RI's implicit domains (label + degree only);
+    ``use_fc=True`` adds the paper's singleton forward checking.
+    """
+    bits = initial_domains(pattern, target)
+    res = DomainResult(bits, bool(np.all(popcount(bits) > 0)))
+    if not res.satisfiable:
+        return res
+    if use_ac:
+        res = arc_consistency(pattern, target, res.bits, max_iters=ac_iters)
+        if not res.satisfiable:
+            return res
+    if use_fc:
+        res = forward_check_singletons(res.bits)
+    return res

@@ -1,0 +1,597 @@
+"""Frontier-vectorized parallel RI/RI-DS search engine.
+
+This is the TPU-native form of the paper's work-stealing DFS (DESIGN.md §2):
+
+* Each of ``V`` workers owns a **ring-buffer stack** of search-tree entries in
+  dense SoA arrays.  An entry is ``(depth, mapping, used-bitmap,
+  candidate-bitmap)`` — the candidate bitmap coalesces *all* untried siblings
+  of one tree node (the paper's task-coalescing taken to its limit; a task
+  ``(μ_i, v_t)`` is one bit).
+* Every step, each worker pops its top ``expand_width`` entries, extracts the
+  lowest untried candidate bit per entry, pushes back surviving parents below
+  the freshly created children (depth-first order preserved per worker), and
+  counts matches at full depth.  Candidate bitmaps for children are
+  ``domain ∧ ¬used ∧ (adjacency rows of mapped parents)`` — the paper's
+  "check consistency before spawning" (§3.1), so every stacked task is
+  consistent.
+* Every ``rebalance_interval`` steps, workers run a steal round
+  (`repro.core.scheduler`): bottom-of-stack entries (near-root ⇒ big
+  subtrees) from loaded workers move to starving ones.
+* Termination: the global entry count hits zero — the all-reduce analogue of
+  the paper's ring-token detection.
+
+Everything is static-shape jnp inside ``lax.while_loop``; with the worker
+axis sharded over the mesh ``data`` axis and bitmap words over ``model``,
+pjit auto-partitions the steal round's cross-worker traffic into collectives.
+
+Counters use int32 (single-instance state counts in our collections are far
+below 2^31; the multi-query driver sums per-instance results in int64 on
+host).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import scheduler
+from repro.core.graph import WORD_BITS, bitmap_from_indices
+from repro.core.plan import SearchPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine parameters.
+
+    Attributes:
+      n_workers: number of (virtual) workers ``V``.  On a mesh, ``V`` is
+        sharded over the ``data`` axis; on one device all ``V`` run vectorized
+        (used by the CPU benchmarks to reproduce the paper's worker sweeps).
+      expand_width: entries expanded per worker per step (SIMD lane count).
+      steal_chunk: entries a donor offers per steal round — the paper's task
+        group size (Fig. 4: 4 is best).
+      keep_min: donors never drop below this size.
+      recv_cap: max entries a receiver accepts per round.
+      rebalance_interval: steps between steal rounds.
+      work_stealing: disable to reproduce the paper's Fig. 3 ablation.
+      stack_cap: ring-buffer capacity per worker; 0 = auto
+        (``expand_width * (p_pad + 2) + steal_chunk + 8``).
+      max_steps: safety bound on outer loop iterations (0 = 2**30).
+      collect_matches: if > 0, materialize up to this many mappings per worker
+        into a ring buffer (the paper's tools print matches; counting is the
+        benchmarked mode).
+      use_pallas: route candidate-bitmap computation through the Pallas
+        kernel (`repro.kernels.ops.candidate_mask`) instead of pure jnp.
+      store_used: keep per-entry used-bitmaps on the stack (True) or
+        recompute them from the mapping at expansion time (False).  §Perf
+        iteration 7: the used-bitmap duplicates information already in the
+        mapping; dropping it removes one of the two W-wide stack arrays
+        (≈1/3 of stack scatter/steal traffic) at the cost of p_pad fused
+        VPU ops per expanded lane.
+    """
+
+    n_workers: int = 1
+    expand_width: int = 8
+    steal_chunk: int = 4
+    keep_min: int = 2
+    recv_cap: int = 4
+    rebalance_interval: int = 8
+    work_stealing: bool = True
+    stack_cap: int = 0
+    max_steps: int = 0
+    collect_matches: int = 0
+    use_pallas: bool = False
+    store_used: bool = True
+
+    def resolved_stack_cap(self, p_pad: int) -> int:
+        if self.stack_cap:
+            return self.stack_cap
+        return self.expand_width * (p_pad + 2) + self.steal_chunk + 8
+
+
+class PlanArrays(NamedTuple):
+    """Device-resident static plan arrays (see SearchPlan)."""
+
+    order_valid: jnp.ndarray  # [p_pad] bool (True for real positions)
+    parent_pos: jnp.ndarray  # [p_pad, mp] int32
+    parent_dir: jnp.ndarray  # [p_pad, mp]
+    parent_elab: jnp.ndarray  # [p_pad, mp]
+    dom_bits: jnp.ndarray  # [p_pad, w] uint32
+    adj_bits: jnp.ndarray  # [n_elab, 2, n_t, w] uint32
+    n_p: jnp.ndarray  # scalar int32 (actual pattern size)
+
+
+class EngineState(NamedTuple):
+    st_depth: jnp.ndarray  # [V, S] int32
+    st_map: jnp.ndarray  # [V, S, P] int32
+    st_used: jnp.ndarray  # [V, S, W] uint32
+    st_cand: jnp.ndarray  # [V, S, W] uint32
+    base: jnp.ndarray  # [V] int32 ring-buffer base
+    size: jnp.ndarray  # [V] int32
+    matches: jnp.ndarray  # [V] int32
+    states: jnp.ndarray  # [V] int32
+    exp_depth: jnp.ndarray  # [V] int32 summed depth of expanded entries
+    steals: jnp.ndarray  # [V] int32 entries received
+    steal_depth: jnp.ndarray  # [V] int32 summed depth of stolen entries
+    steal_rounds: jnp.ndarray  # [] int32 rounds with any transfer
+    steps: jnp.ndarray  # [] int32
+    overflow: jnp.ndarray  # [] bool — stack high-watermark breached
+    match_buf: jnp.ndarray  # [V, Mcap, P] int32 (Mcap >= 1)
+
+
+class EngineResult(NamedTuple):
+    matches: int
+    states: int
+    steps: int
+    steals: int
+    steal_rounds: int
+    mean_steal_depth: float
+    mean_expand_depth: float
+    per_worker_states: np.ndarray
+    per_worker_matches: np.ndarray
+    overflow: bool
+    match_buf: Optional[np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# bit helpers
+# ---------------------------------------------------------------------------
+
+def _pop_lowest_bit(cand: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Extract the lowest set bit of a ``[W]`` uint32 bitmap.
+
+    Returns ``(valid, v, cand_without_v)``; ``v`` is the global bit index.
+    """
+    nz = cand != 0
+    valid = jnp.any(nz)
+    widx = jnp.argmax(nz)  # first non-zero word (0 if none)
+    word = cand[widx]
+    # trailing zeros = popcount(~w & (w - 1)); word==0 guarded by `valid`.
+    tz = lax.population_count(~word & (word - jnp.uint32(1)))
+    v = widx.astype(jnp.int32) * WORD_BITS + tz.astype(jnp.int32)
+    cand2 = cand.at[widx].set(word & (word - jnp.uint32(1)))
+    return valid, v, cand2
+
+
+def _bit_row(v: jnp.ndarray, w: int) -> jnp.ndarray:
+    """One-hot ``[w]`` uint32 bitmap with bit ``v`` set."""
+    word = v // WORD_BITS
+    bit = jnp.uint32(1) << (v % WORD_BITS).astype(jnp.uint32)
+    return jnp.zeros((w,), jnp.uint32).at[word].set(bit)
+
+
+def _used_from_map(map_: jnp.ndarray, depth: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Reconstruct the used-bitmap from mapped targets at positions < depth
+    (store_used=False path)."""
+    p_pad = map_.shape[0]
+
+    def body(j, u):
+        valid = (j < depth) & (map_[j] >= 0)
+        t = jnp.maximum(map_[j], 0)
+        word = t // WORD_BITS
+        bit = jnp.where(valid, jnp.uint32(1) << (t % WORD_BITS).astype(jnp.uint32),
+                        jnp.uint32(0))
+        return u.at[word].set(u[word] | bit)
+
+    return lax.fori_loop(0, p_pad, body, jnp.zeros((w,), jnp.uint32))
+
+
+def _compute_cand_jnp(
+    plan: PlanArrays, pos: jnp.ndarray, map_: jnp.ndarray, used: jnp.ndarray
+) -> jnp.ndarray:
+    """Candidate bitmap for order position ``pos`` given mapping/used.
+
+    ``dom[pos] ∧ ¬used ∧ ⋀_parents adj_bits[elab, dir, mapped_parent]`` —
+    the engine's hot loop; `repro.kernels.candidate_mask` is the Pallas form.
+    """
+    mp = plan.parent_pos.shape[1]
+    safe_pos = jnp.clip(pos, 0, plan.dom_bits.shape[0] - 1)
+    cand = plan.dom_bits[safe_pos] & ~used
+
+    def body(j, c):
+        pp = plan.parent_pos[safe_pos, j]
+        pd = plan.parent_dir[safe_pos, j]
+        pl = plan.parent_elab[safe_pos, j]
+        t = jnp.where(pp >= 0, map_[jnp.maximum(pp, 0)], 0)
+        row = plan.adj_bits[pl, pd, jnp.clip(t, 0, plan.adj_bits.shape[2] - 1)]
+        return jnp.where(pp >= 0, c & row, c)
+
+    return lax.fori_loop(0, mp, body, cand)
+
+
+# ---------------------------------------------------------------------------
+# per-worker expansion step (vmapped over the worker axis)
+# ---------------------------------------------------------------------------
+
+def _worker_step(cfg: EngineConfig, plan: PlanArrays, compute_cand, carry):
+    (st_depth, st_map, st_used, st_cand, base, size, matches, states, exp_depth, mbuf) = carry
+    s_cap = st_depth.shape[0]
+    p_pad = st_map.shape[1]
+    w = st_cand.shape[1]
+    e = cfg.expand_width
+
+    # ---- select top-of-stack lanes (respecting the capacity guard) --------
+    space = s_cap - size
+    k = jnp.minimum(jnp.minimum(size, e), space).astype(jnp.int32)
+    lane = jnp.arange(e, dtype=jnp.int32)
+    lane_on = lane < k
+    pos = size - 1 - lane  # top-first
+    slot = jnp.where(lane_on, (base + pos) % s_cap, 0)
+
+    depth = jnp.where(lane_on, st_depth[slot], 0)
+    cand = jnp.where(lane_on[:, None], st_cand[slot], jnp.uint32(0))
+    map_ = st_map[slot]
+    if cfg.store_used:
+        used = st_used[slot]
+    else:
+        used = jax.vmap(lambda m, dd: _used_from_map(m, dd, w))(map_, depth)
+
+    # ---- extract one candidate per lane ------------------------------------
+    valid, v, cand2 = jax.vmap(_pop_lowest_bit)(cand)
+    valid = valid & lane_on
+    states = states + jnp.sum(valid, dtype=jnp.int32)
+    exp_depth = exp_depth + jnp.sum(jnp.where(valid, depth, 0), dtype=jnp.int32)
+
+    # ---- build children -----------------------------------------------------
+    map2 = jnp.where(
+        valid[:, None],
+        map_.at[jnp.arange(e), jnp.clip(depth, 0, p_pad - 1)].set(v),
+        map_,
+    )
+    used2 = jnp.where(valid[:, None], used | jax.vmap(_bit_row, (0, None))(v, w), used)
+    is_match = valid & (depth + 1 >= plan.n_p)
+    matches = matches + jnp.sum(is_match, dtype=jnp.int32)
+
+    want_child = valid & ~is_match
+    child_cand = compute_cand(
+        jnp.where(want_child, depth + 1, 0), map2, used2
+    )
+    child_cand = jnp.where(want_child[:, None], child_cand, jnp.uint32(0))
+    has_child = want_child & jnp.any(child_cand != 0, axis=-1)
+
+    # ---- match ring buffer ---------------------------------------------------
+    if cfg.collect_matches > 0:
+        mcap = mbuf.shape[0]
+        # per-lane match ordinal within this step
+        m_prefix = jnp.cumsum(is_match.astype(jnp.int32)) - is_match
+        m_slot = (matches - jnp.sum(is_match, dtype=jnp.int32) + m_prefix) % mcap
+        m_slot = jnp.where(is_match, m_slot, mcap)  # drop non-matches
+        mbuf = mbuf.at[m_slot].set(map2, mode="drop")
+
+    # ---- push back: parents (below) then children (above), lane k-1 .. 0 ----
+    parent_keep = lane_on & jnp.any(cand2 != 0, axis=-1)
+    # reversed-lane order: lane k-1 emitted first (deepest lane 0 ends on top)
+    rev = e - 1 - lane
+    pk_r = parent_keep[rev]
+    hc_r = has_child[rev]
+    per_lane = pk_r.astype(jnp.int32) + hc_r.astype(jnp.int32)
+    offs = jnp.cumsum(per_lane) - per_lane  # position of lane rev[i]'s first push
+    parent_out = jnp.where(pk_r, offs, -1)
+    child_out = jnp.where(hc_r, offs + pk_r.astype(jnp.int32), -1)
+    # map back to lane order
+    inv = rev  # reversal is its own inverse
+    parent_out = parent_out[inv]
+    child_out = child_out[inv]
+    total_push = jnp.sum(per_lane)
+
+    new_size = size - k + total_push
+    push_base = size - k  # logical position of first pushed entry
+
+    def slots_for(out_pos):
+        return jnp.where(out_pos >= 0, (base + push_base + out_pos) % s_cap, s_cap)
+
+    p_slots = slots_for(parent_out)
+    c_slots = slots_for(child_out)
+
+    st_depth = st_depth.at[p_slots].set(depth, mode="drop")
+    st_map = st_map.at[p_slots].set(map_, mode="drop")
+    st_cand = st_cand.at[p_slots].set(cand2, mode="drop")
+
+    st_depth = st_depth.at[c_slots].set(depth + 1, mode="drop")
+    st_map = st_map.at[c_slots].set(map2, mode="drop")
+    st_cand = st_cand.at[c_slots].set(child_cand, mode="drop")
+
+    if cfg.store_used:
+        st_used = st_used.at[p_slots].set(used, mode="drop")
+        st_used = st_used.at[c_slots].set(used2, mode="drop")
+
+    return (st_depth, st_map, st_used, st_cand, base, new_size, matches, states, exp_depth, mbuf)
+
+
+# ---------------------------------------------------------------------------
+# steal round (cross-worker, pure array ops over the V axis)
+# ---------------------------------------------------------------------------
+
+def _steal_round(cfg: EngineConfig, state: EngineState) -> EngineState:
+    policy = scheduler.StealPolicy(
+        steal_chunk=cfg.steal_chunk, keep_min=cfg.keep_min, recv_cap=cfg.recv_cap
+    )
+    v_workers, s_cap = state.st_depth.shape
+    c = cfg.steal_chunk
+
+    donate, accepted, dest_rank, dest_pos = scheduler.plan_steals(state.size, policy)
+    wor = scheduler.receiver_workers(state.size)  # [V] worker per rank
+
+    any_transfer = jnp.sum(accepted) > 0
+
+    # gather donated rows from stack bottoms: donor d slot j = logical pos j
+    slot_j = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (v_workers, c))
+    src_slot = (state.base[:, None] + slot_j) % s_cap  # [V, C]
+    didx = jnp.arange(v_workers, dtype=jnp.int32)[:, None]
+    don_depth = state.st_depth[didx, src_slot]  # [V, C]
+    don_map = state.st_map[didx, src_slot]
+    don_used = state.st_used[didx, src_slot]
+    don_cand = state.st_cand[didx, src_slot]
+
+    taken = slot_j < accepted[:, None]  # [V, C]
+    dest_w = jnp.where(taken, wor[jnp.clip(dest_rank, 0, v_workers - 1)], -1)
+    # receivers are empty (size==0) so intake slot = (base + pos) % S
+    recv_base = jnp.where(dest_w >= 0, state.base[jnp.maximum(dest_w, 0)], 0)
+    dst_slot = (recv_base + dest_pos) % s_cap
+    dw = jnp.where(dest_w >= 0, dest_w, v_workers)  # drop invalid
+
+    st_depth = state.st_depth.at[dw, dst_slot].set(don_depth, mode="drop")
+    st_map = state.st_map.at[dw, dst_slot].set(don_map, mode="drop")
+    st_used = state.st_used.at[dw, dst_slot].set(don_used, mode="drop")
+    st_cand = state.st_cand.at[dw, dst_slot].set(don_cand, mode="drop")
+
+    # intake counts / steal metrics per receiver
+    flat_w = dw.reshape(-1)
+    ones = jnp.where(dest_w.reshape(-1) >= 0, 1, 0)
+    recv_cnt = jnp.zeros((v_workers,), jnp.int32).at[flat_w].add(ones, mode="drop")
+    depth_add = jnp.zeros((v_workers,), jnp.int32).at[flat_w].add(
+        jnp.where(dest_w.reshape(-1) >= 0, don_depth.reshape(-1), 0), mode="drop"
+    )
+
+    # donors advance base (accepted slots were their bottom prefix)
+    new_base = (state.base + accepted) % s_cap
+    new_size = state.size - accepted + recv_cnt
+
+    return state._replace(
+        st_depth=st_depth,
+        st_map=st_map,
+        st_used=st_used,
+        st_cand=st_cand,
+        base=new_base,
+        size=new_size,
+        steals=state.steals + recv_cnt,
+        steal_depth=state.steal_depth + depth_add,
+        steal_rounds=state.steal_rounds + any_transfer.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def make_plan_arrays(plan: SearchPlan) -> PlanArrays:
+    return PlanArrays(
+        order_valid=jnp.asarray(plan.order >= 0),
+        parent_pos=jnp.asarray(plan.parent_pos, jnp.int32),
+        parent_dir=jnp.asarray(plan.parent_dir, jnp.int32),
+        parent_elab=jnp.asarray(plan.parent_elab, jnp.int32),
+        dom_bits=jnp.asarray(plan.dom_bits, jnp.uint32),
+        adj_bits=jnp.asarray(plan.adj_bits, jnp.uint32),
+        n_p=jnp.asarray(plan.n_p, jnp.int32),
+    )
+
+
+def init_state(plan: SearchPlan, cfg: EngineConfig) -> EngineState:
+    """Initial work distribution (paper §3.3): depth-0 candidates are split
+    into equal contiguous target-node ranges, one root entry per worker."""
+    v = cfg.n_workers
+    p_pad, w = plan.p_pad, plan.w
+    s_cap = cfg.resolved_stack_cap(p_pad)
+    mcap = max(1, cfg.collect_matches)
+
+    splits = np.linspace(0, plan.n_t, v + 1).astype(np.int64)
+    root_cands = np.zeros((v, w), dtype=np.uint32)
+    for k in range(v):
+        idx = np.arange(splits[k], splits[k + 1])
+        if idx.size:
+            root_cands[k] = bitmap_from_indices(idx, plan.n_t, w) & plan.dom_bits[0]
+    if not plan.satisfiable:
+        root_cands[:] = 0
+
+    st_depth = np.zeros((v, s_cap), dtype=np.int32)
+    st_map = np.full((v, s_cap, p_pad), -1, dtype=np.int32)
+    st_used = np.zeros((v, s_cap, w if cfg.store_used else 1), dtype=np.uint32)
+    st_cand = np.zeros((v, s_cap, w), dtype=np.uint32)
+    st_cand[:, 0] = root_cands
+    size = (root_cands.any(axis=1)).astype(np.int32)
+
+    return EngineState(
+        st_depth=jnp.asarray(st_depth),
+        st_map=jnp.asarray(st_map),
+        st_used=jnp.asarray(st_used),
+        st_cand=jnp.asarray(st_cand),
+        base=jnp.zeros((v,), jnp.int32),
+        size=jnp.asarray(size),
+        matches=jnp.zeros((v,), jnp.int32),
+        states=jnp.zeros((v,), jnp.int32),
+        exp_depth=jnp.zeros((v,), jnp.int32),
+        steals=jnp.zeros((v,), jnp.int32),
+        steal_depth=jnp.zeros((v,), jnp.int32),
+        steal_rounds=jnp.zeros((), jnp.int32),
+        steps=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.bool_),
+        match_buf=jnp.full((v, mcap, p_pad), -1, jnp.int32),
+    )
+
+
+def make_round_fn(cfg: EngineConfig, plan: PlanArrays):
+    """Build the body of the outer loop: ``rebalance_interval`` expansion
+    steps followed by one steal round.  Exposed separately so the dry-run /
+    roofline can lower exactly one round (stable cost accounting)."""
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+
+        rows = kops.flatten_adj_rows(plan.adj_bits)
+        n_rows = rows.shape[0] - 1
+        n_t = plan.adj_bits.shape[2]
+        p_max = plan.dom_bits.shape[0] - 1
+
+        def compute_cand(pos, map2, used2):
+            safe_pos = jnp.clip(pos, 0, p_max)
+            row_idx = jax.vmap(
+                lambda p, m: kops.flat_row_index(
+                    plan.parent_pos[p], plan.parent_dir[p], plan.parent_elab[p],
+                    m, n_t, n_rows,
+                )
+            )(safe_pos, map2)
+            return kops.candidate_mask(rows, plan.dom_bits, safe_pos, row_idx, used2)
+    else:
+        compute_one = functools.partial(_compute_cand_jnp, plan)
+
+        def compute_cand(pos, map2, used2):
+            return jax.vmap(compute_one)(pos, map2, used2)
+
+    step_fn = jax.vmap(
+        functools.partial(_worker_step, cfg, plan, compute_cand),
+        in_axes=((0, 0, 0, 0, 0, 0, 0, 0, 0, 0),),
+        out_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
+    )
+
+    def body(state: EngineState) -> EngineState:
+        def inner(_, st: EngineState) -> EngineState:
+            carry = (
+                st.st_depth, st.st_map, st.st_used, st.st_cand,
+                st.base, st.size, st.matches, st.states, st.exp_depth,
+                st.match_buf,
+            )
+            out = step_fn(carry)
+            (st_depth, st_map, st_used, st_cand, base, size, matches, states,
+             exp_depth, mbuf) = out
+            s_cap = st_depth.shape[1]
+            overflow = st.overflow | jnp.any(size > s_cap - 1)
+            return st._replace(
+                st_depth=st_depth, st_map=st_map, st_used=st_used, st_cand=st_cand,
+                base=base, size=size, matches=matches, states=states,
+                exp_depth=exp_depth, match_buf=mbuf, overflow=overflow,
+            )
+
+        state = lax.fori_loop(0, cfg.rebalance_interval, inner, state)
+        if cfg.work_stealing and cfg.n_workers > 1:
+            state = _steal_round(cfg, state)
+        return state._replace(steps=state.steps + cfg.rebalance_interval)
+
+    return body
+
+
+def _engine_loop(cfg: EngineConfig, plan: PlanArrays, state: EngineState) -> EngineState:
+    max_steps = cfg.max_steps or (1 << 30)
+    body = make_round_fn(cfg, plan)
+
+    def cond(state: EngineState) -> jnp.ndarray:
+        return (jnp.sum(state.size) > 0) & (state.steps < max_steps)
+
+    return lax.while_loop(cond, body, state)
+
+
+# ---------------------------------------------------------------------------
+# abstract builders (dry-run lowering without allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_plan_arrays(
+    n_t: int, w: int, p_pad: int, max_parents: int, n_elab: int = 1
+) -> PlanArrays:
+    sds = jax.ShapeDtypeStruct
+    return PlanArrays(
+        order_valid=sds((p_pad,), jnp.bool_),
+        parent_pos=sds((p_pad, max_parents), jnp.int32),
+        parent_dir=sds((p_pad, max_parents), jnp.int32),
+        parent_elab=sds((p_pad, max_parents), jnp.int32),
+        dom_bits=sds((p_pad, w), jnp.uint32),
+        adj_bits=sds((n_elab, 2, n_t, w), jnp.uint32),
+        n_p=sds((), jnp.int32),
+    )
+
+
+PLAN_LOGICAL = PlanArrays(
+    order_valid=(None,),
+    parent_pos=(None, None),
+    parent_dir=(None, None),
+    parent_elab=(None, None),
+    dom_bits=(None, "tensor"),
+    adj_bits=(None, None, None, "tensor"),
+    n_p=(),
+)
+
+
+def abstract_engine_state(cfg: EngineConfig, w: int, p_pad: int) -> EngineState:
+    v = cfg.n_workers
+    s_cap = cfg.resolved_stack_cap(p_pad)
+    mcap = max(1, cfg.collect_matches)
+    w_used = w if cfg.store_used else 1
+    sds = jax.ShapeDtypeStruct
+    return EngineState(
+        st_depth=sds((v, s_cap), jnp.int32),
+        st_map=sds((v, s_cap, p_pad), jnp.int32),
+        st_used=sds((v, s_cap, w_used), jnp.uint32),
+        st_cand=sds((v, s_cap, w), jnp.uint32),
+        base=sds((v,), jnp.int32),
+        size=sds((v,), jnp.int32),
+        matches=sds((v,), jnp.int32),
+        states=sds((v,), jnp.int32),
+        exp_depth=sds((v,), jnp.int32),
+        steals=sds((v,), jnp.int32),
+        steal_depth=sds((v,), jnp.int32),
+        steal_rounds=sds((), jnp.int32),
+        steps=sds((), jnp.int32),
+        overflow=sds((), jnp.bool_),
+        match_buf=sds((v, mcap, p_pad), jnp.int32),
+    )
+
+
+STATE_LOGICAL = EngineState(
+    st_depth=("worker", None),
+    st_map=("worker", None, None),
+    st_used=("worker", None, "tensor"),
+    st_cand=("worker", None, "tensor"),
+    base=("worker",),
+    size=("worker",),
+    matches=("worker",),
+    states=("worker",),
+    exp_depth=("worker",),
+    steals=("worker",),
+    steal_depth=("worker",),
+    steal_rounds=(),
+    steps=(),
+    overflow=(),
+    match_buf=("worker", None, None),
+)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_jit(cfg: EngineConfig, plan: PlanArrays, state: EngineState) -> EngineState:
+    return _engine_loop(cfg, plan, state)
+
+
+def run(plan: SearchPlan, cfg: EngineConfig) -> EngineResult:
+    """Enumerate all isomorphic subgraphs described by ``plan``."""
+    arrays = make_plan_arrays(plan)
+    state = init_state(plan, cfg)
+    final = jax.block_until_ready(_run_jit(cfg, arrays, state))
+    steals = int(jnp.sum(final.steals))
+    sdepth = int(jnp.sum(final.steal_depth))
+    states = int(jnp.sum(final.states))
+    edepth = int(jnp.sum(final.exp_depth))
+    return EngineResult(
+        matches=int(jnp.sum(final.matches)),
+        states=states,
+        steps=int(final.steps),
+        steals=steals,
+        steal_rounds=int(final.steal_rounds),
+        mean_steal_depth=(sdepth / steals) if steals else 0.0,
+        mean_expand_depth=(edepth / states) if states else 0.0,
+        per_worker_states=np.asarray(final.states),
+        per_worker_matches=np.asarray(final.matches),
+        overflow=bool(final.overflow),
+        match_buf=np.asarray(final.match_buf) if cfg.collect_matches else None,
+    )

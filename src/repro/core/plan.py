@@ -1,0 +1,135 @@
+"""SearchPlan — the static preprocessing product handed to the engine.
+
+Bundles everything the vectorized search needs as dense, padded arrays:
+ordering-position-indexed domains, parent constraint tables and the packed
+target graph.  All preprocessing (ordering + domains) happens on host in
+numpy; the arrays are small except the bitmaps, which the engine shards.
+
+Variants (paper terminology):
+
+  * ``ri``          — RI: static domains are label+degree compat only.
+  * ``ri-ds``       — RI-DS: + arc-consistent domains, singletons first.
+  * ``ri-ds-si``    — + domain-size tie-breaking in the ordering (§4.2.1).
+  * ``ri-ds-si-fc`` — + singleton forward checking (§4.2.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import domains as dom_mod
+from repro.core import ordering as ord_mod
+from repro.core.graph import Graph, PackedGraph, popcount
+
+VARIANTS = ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc")
+
+
+@dataclasses.dataclass
+class SearchPlan:
+    """Static arrays for the vectorized search engine.
+
+    All position-indexed arrays are padded to ``p_pad`` positions and
+    ``max_parents`` parent slots.
+    """
+
+    variant: str
+    n_p: int  # actual number of pattern nodes
+    p_pad: int  # padded position count (>= n_p)
+    n_t: int
+    w: int  # bitmap words per row
+    order: np.ndarray  # [p_pad] int32 pattern node id per position (-1 pad)
+    parent_pos: np.ndarray  # [p_pad, max_parents] int32, -1 padded
+    parent_dir: np.ndarray  # [p_pad, max_parents] int32
+    parent_elab: np.ndarray  # [p_pad, max_parents] int32
+    n_parents: np.ndarray  # [p_pad] int32
+    dom_bits: np.ndarray  # [p_pad, w] uint32 — domain of order[i], position space
+    adj_bits: np.ndarray  # [n_elab, 2, n_t, w] uint32
+    satisfiable: bool
+
+    @property
+    def max_parents(self) -> int:
+        return int(self.parent_pos.shape[1])
+
+    @property
+    def n_edge_labels(self) -> int:
+        return int(self.adj_bits.shape[0])
+
+    def domain_sizes(self) -> np.ndarray:
+        return popcount(self.dom_bits[: self.n_p])
+
+
+def build_plan(
+    pattern: Graph,
+    target: PackedGraph,
+    variant: str = "ri-ds-si-fc",
+    p_pad: Optional[int] = None,
+    max_parents: Optional[int] = None,
+    ac_iters: Optional[int] = None,
+) -> SearchPlan:
+    """Run preprocessing (domains + ordering) and emit a :class:`SearchPlan`."""
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}, expected one of {VARIANTS}")
+    use_ds = variant != "ri"
+    use_si = variant in ("ri-ds-si", "ri-ds-si-fc")
+    use_fc = variant == "ri-ds-si-fc"
+
+    # --- domains ---------------------------------------------------------
+    dres = dom_mod.compute_domains(
+        pattern, target, use_ac=use_ds, use_fc=use_fc, ac_iters=ac_iters
+    )
+    dom_sizes = popcount(dres.bits)
+
+    # --- ordering ----------------------------------------------------------
+    # RI ignores domains when ordering; RI-DS places singletons first (but its
+    # greedy tie-break does not see domain sizes); SI adds the size tie-break.
+    if use_si:
+        ordering = ord_mod.greatest_constraint_first(
+            pattern, domain_sizes=dom_sizes, singleton_first=True
+        )
+    elif use_ds:
+        # expose only singleton-ness, so placement matches RI-DS while the
+        # greedy tie-break stays size-blind (all non-singletons look equal).
+        flat = np.where(dom_sizes == 1, 1, 2).astype(np.int64)
+        ordering = ord_mod.greatest_constraint_first(
+            pattern, domain_sizes=flat, singleton_first=True
+        )
+    else:
+        ordering = ord_mod.greatest_constraint_first(pattern)
+
+    n_p = pattern.n
+    p_pad = max(p_pad or n_p, n_p, 1)
+    ppos, pdir, pelab, pcnt = ordering.parent_arrays(max_parents)
+    mp = ppos.shape[1]
+
+    order = np.full(p_pad, -1, dtype=np.int32)
+    order[:n_p] = ordering.order
+    parent_pos = np.full((p_pad, mp), -1, dtype=np.int32)
+    parent_pos[:n_p] = ppos
+    parent_dir = np.zeros((p_pad, mp), dtype=np.int32)
+    parent_dir[:n_p] = pdir
+    parent_elab = np.zeros((p_pad, mp), dtype=np.int32)
+    parent_elab[:n_p] = pelab
+    n_parents = np.zeros(p_pad, dtype=np.int32)
+    n_parents[:n_p] = pcnt
+
+    dom_pos = np.zeros((p_pad, target.w), dtype=np.uint32)
+    dom_pos[:n_p] = dres.bits[ordering.order]
+
+    return SearchPlan(
+        variant=variant,
+        n_p=n_p,
+        p_pad=p_pad,
+        n_t=target.n,
+        w=target.w,
+        order=order,
+        parent_pos=parent_pos,
+        parent_dir=parent_dir,
+        parent_elab=parent_elab,
+        n_parents=n_parents,
+        dom_bits=dom_pos,
+        adj_bits=target.adj_bits,
+        satisfiable=dres.satisfiable,
+    )

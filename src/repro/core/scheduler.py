@@ -1,0 +1,124 @@
+"""Work-stealing rebalance policy — the SPMD analogue of the paper's
+receiver-initiated private-deque stealing (DESIGN.md §2).
+
+Every worker computes the *same* global plan from the all-gathered stack
+occupancy vector (the paper's ``work_available`` array):
+
+  * donors: workers with more than ``keep_min`` entries donate up to
+    ``steal_chunk`` entries from the **bottom** of their stacks (near-root ⇒
+    large subtrees, the paper's steal-from-the-back heuristic).
+  * receivers: workers with empty stacks (receiver-initiated).
+  * matching: donated slots are compacted to a global sequence and dealt
+    round-robin to receivers — slot ``s`` goes to receiver-rank ``s mod n_recv``
+    at intake position ``s div n_recv``; intake is capped so a donor's
+    accepted slots are always a *prefix* of its donation (donors simply keep
+    the rest).
+
+Everything is branch-free jnp so it lowers inside ``lax.while_loop`` and
+auto-partitions over the mesh ``data`` axis under pjit.  The same policy is
+reused host-side (numpy) by the GNN irregular-batch balancer
+(`repro.models.gnn.sampler.balance_buckets`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StealPolicy:
+    steal_chunk: int = 4  # entries donated per donor per round (the paper's
+    # task-group size; group size 4 was the paper's best — Fig. 4)
+    keep_min: int = 2  # donors never drop below this many entries
+    recv_cap: int = 4  # max entries a receiver accepts per round
+
+
+def plan_steals(
+    sizes: jnp.ndarray, policy: StealPolicy
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compute the global steal plan from the stack-occupancy vector.
+
+    Args:
+      sizes: ``[V]`` int32 per-worker stack sizes.
+      policy: steal policy constants (static).
+
+    Returns:
+      donate:     ``[V]`` int32 — entries each donor offers (bottom of stack).
+      accepted:   ``[V]`` int32 — entries actually taken from each donor
+                  (always a prefix of its offer).
+      dest_rank:  ``[V, steal_chunk]`` int32 — receiver *rank* for each donated
+                  slot, ``-1`` if the slot is not accepted.
+      dest_pos:   ``[V, steal_chunk]`` int32 — intake position at the receiver.
+    """
+    v = sizes.shape[0]
+    c = policy.steal_chunk
+    donate = jnp.where(
+        sizes > policy.keep_min,
+        jnp.minimum(c, sizes - policy.keep_min),
+        0,
+    ).astype(jnp.int32)
+    hungry = sizes == 0
+    n_recv = jnp.sum(hungry).astype(jnp.int32)
+
+    # Global valid-slot index (donor-major, so per-donor slots stay contiguous
+    # and acceptance-by-threshold keeps a donor's accepted slots a prefix).
+    slot_j = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (v, c))
+    valid = slot_j < donate[:, None]
+    start = jnp.cumsum(donate) - donate  # exclusive prefix sum [V]
+    gidx = start[:, None] + slot_j  # [V, C] global index among valid slots
+    budget = n_recv * policy.recv_cap
+    accepted_slot = valid & (gidx < budget)
+
+    safe_recv = jnp.maximum(n_recv, 1)
+    dest_rank = jnp.where(accepted_slot, gidx % safe_recv, -1).astype(jnp.int32)
+    dest_pos = jnp.where(accepted_slot, gidx // safe_recv, 0).astype(jnp.int32)
+    accepted = jnp.sum(accepted_slot, axis=1).astype(jnp.int32)
+    return donate, accepted, dest_rank, dest_pos
+
+
+def receiver_workers(sizes: jnp.ndarray) -> jnp.ndarray:
+    """``[V]`` worker index per receiver rank (padded with ``-1``)."""
+    v = sizes.shape[0]
+    hungry = sizes == 0
+    rrank = jnp.cumsum(hungry.astype(jnp.int32)) - 1
+    wor = jnp.full((v,), -1, dtype=jnp.int32)
+    wor = wor.at[jnp.where(hungry, rrank, v)].set(
+        jnp.arange(v, dtype=jnp.int32), mode="drop"
+    )
+    return wor
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) variant: static balanced assignment of weighted buckets.
+# Used by the GNN sampler to spread skewed subgraph batches over shards — the
+# paper's load-balancing insight applied to irregular minibatches.
+# ---------------------------------------------------------------------------
+
+def balance_assignment(weights: np.ndarray, n_shards: int) -> np.ndarray:
+    """Greedy longest-processing-time assignment of weighted items to shards.
+
+    Returns ``[len(weights)]`` shard ids.  LPT is a 4/3-approximation of
+    makespan — adequate for batch balancing; the *dynamic* balancer (the
+    engine's steal rounds) covers residual skew at runtime.
+    """
+    weights = np.asarray(weights, dtype=np.float64)
+    order = np.argsort(-weights, kind="stable")
+    load = np.zeros(n_shards, dtype=np.float64)
+    out = np.zeros(len(weights), dtype=np.int32)
+    for i in order:
+        s = int(np.argmin(load))
+        out[i] = s
+        load[s] += weights[i]
+    return out
+
+
+def imbalance(weights: np.ndarray, assignment: np.ndarray, n_shards: int) -> float:
+    """max/mean shard load — 1.0 is perfect balance."""
+    load = np.bincount(assignment, weights=weights, minlength=n_shards)
+    mean = load.mean()
+    return float(load.max() / mean) if mean > 0 else 1.0

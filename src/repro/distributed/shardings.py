@@ -1,0 +1,118 @@
+"""Logical-axis sharding: mesh-agnostic PartitionSpecs.
+
+Models annotate tensors with *logical* axis names; this module maps them to
+whatever physical mesh is in use.  The production meshes (launch/mesh.py) are
+``(data=16, model=16)`` single-pod and ``(pod=2, data=16, model=16)``
+multi-pod; smoke tests run on a trivial 1-device mesh where everything maps
+to ``None`` (replicated).
+
+Logical axes:
+  * ``batch``  — data-parallel batch dim → ``('pod', 'data')``.
+  * ``fsdp``   — ZeRO-3/FSDP parameter dim (all-gathered on use)
+                 → ``('pod', 'data')``.
+  * ``tensor`` — tensor-parallel dim (heads / d_ff / vocab / experts / bitmap
+                 words) → ``'model'``.
+  * ``expert`` — expert-parallel dim → ``'model'``.
+  * ``seq``    — sequence dim (KV-cache length in decode) → ``'model'``.
+  * ``edge``   — GNN edge dim → ``('pod', 'data', 'model')`` (flattened).
+  * ``worker`` — SGE worker dim → ``('pod', 'data')``.
+  * ``query``  — independent SGE query dim → ``'pod'``.
+
+Divisibility: an axis mapping is applied only if the dim size is divisible by
+the mapped mesh-axis product; otherwise the dim is replicated.  That keeps
+every (arch × shape × mesh) cell compilable without per-arch exceptions —
+GSPMD would otherwise reject uneven shardings at lowering time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Optional[str]
+
+_DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "tensor": ("model",),
+    "expert": ("model",),
+    "seq": ("model",),
+    "edge": ("pod", "data", "model"),
+    "worker": ("pod", "data"),
+    "query": ("pod",),
+    None: (),
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def logical_to_pspec(
+    logical: Sequence[LogicalAxis],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> P:
+    """Map per-dim logical axis names to a PartitionSpec for ``mesh``.
+
+    Drops mappings whose mesh axes are absent or whose dim size is not
+    divisible by the mesh-axis product (replicates instead).
+    """
+    rules = rules or _DEFAULT_RULES
+    assert len(logical) == len(shape), (logical, shape)
+    spec = []
+    used: set = set()
+    for name, dim in zip(logical, shape):
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape and a not in used)
+        size = _mesh_axis_size(mesh, axes)
+        if axes and size > 1 and dim % size == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def named_sharding(
+    logical: Sequence[LogicalAxis],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(logical, shape, mesh, rules))
+
+
+def tree_shardings(logical_tree, abstract_tree, mesh: Mesh, rules: Optional[dict] = None):
+    """Zip a pytree of logical-axis tuples with matching ShapeDtypeStructs
+    into NamedShardings."""
+    return jax.tree.map(
+        lambda log, ab: named_sharding(log, ab.shape, mesh, rules),
+        logical_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def constraint(x, logical: Sequence[LogicalAxis], mesh: Optional[Mesh] = None):
+    """``with_sharding_constraint`` by logical axes (no-op outside a mesh)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(logical, x.shape, mesh)
+    )
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:
+        return None

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel for RI-DS arc-consistency filtering.
+
+One AC sweep for a single constraint arc ``(p, q, dir, label)`` tests, for
+every target node ``t``, whether ``adj_rows[t] ∧ D(q)`` has any set bit —
+a ``[n_t, w]`` bitmap AND against a broadcast ``[w]`` mask followed by a
+per-row any-reduce.  This is the SDDMM-shaped part of domain preprocessing
+(DESIGN.md §2): dense rows stream from HBM once, the mask stays resident in
+VMEM.
+
+TPU mapping: grid over row tiles of ``tr`` rows; block ``(tr, w)`` of
+adjacency rows, mask block ``(1, w)`` pinned (same index every step), output
+``(tr, 1)`` int32 flags.  ``w`` padded to 128-word lanes, ``tr`` a multiple
+of 8 sublanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.candidate_mask import pad_words
+
+ROW_TILE = 256
+
+
+def _kernel(rows_ref, mask_ref, out_ref):
+    hit = (rows_ref[...] & mask_ref[...]) != 0  # [tr, w] bool
+    out_ref[...] = jnp.any(hit, axis=-1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile"))
+def adjacency_any(
+    rows: jnp.ndarray,  # [n_t, w] uint32
+    mask: jnp.ndarray,  # [w] uint32
+    interpret: bool = True,
+    row_tile: int = ROW_TILE,
+) -> jnp.ndarray:
+    """Per-row any-bit test of ``rows ∧ mask`` -> ``[n_t]`` int32 {0,1}."""
+    n_t, w = rows.shape
+    wp = pad_words(w)
+    tr = row_tile
+    n_pad = ((n_t + tr - 1) // tr) * tr
+    rows_p = jnp.pad(rows, ((0, n_pad - n_t), (0, wp - w)))
+    mask_p = jnp.pad(mask, (0, wp - w))[None, :]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, wp), lambda i: (i, 0)),
+            pl.BlockSpec((1, wp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+        interpret=interpret,
+    )(rows_p, mask_p)
+    return out[:n_t, 0]

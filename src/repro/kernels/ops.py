@@ -1,0 +1,41 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``INTERPRET`` defaults to True on CPU (this container) so the kernels
+execute their Python bodies for validation; on a TPU backend it flips to
+False automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import candidate_mask as _cm
+from repro.kernels import domain_ac as _ac
+from repro.kernels import popcount_reduce as _pc
+from repro.kernels import ref as kref
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def candidate_mask(rows, dom_bits, pos, row_idx, used, interpret=None):
+    """See `repro.kernels.candidate_mask.candidate_mask`."""
+    it = INTERPRET if interpret is None else interpret
+    return _cm.candidate_mask(rows, dom_bits, pos, row_idx, used, interpret=it)
+
+
+def adjacency_any(rows, mask, interpret=None):
+    """See `repro.kernels.domain_ac.adjacency_any`."""
+    it = INTERPRET if interpret is None else interpret
+    return _ac.adjacency_any(rows, mask, interpret=it)
+
+
+def popcount_rows(bits, interpret=None):
+    """See `repro.kernels.popcount_reduce.popcount_rows`."""
+    it = INTERPRET if interpret is None else interpret
+    return _pc.popcount_rows(bits, interpret=it)
+
+
+flatten_adj_rows = _cm.flatten_adj_rows
+flat_row_index = _cm.flat_row_index
+pack_bits = kref.pack_bits_ref

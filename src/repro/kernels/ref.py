@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function mirrors its kernel's contract exactly; the kernel tests sweep
+shapes/dtypes and assert bit-exact equality (these are integer bitwise ops —
+no tolerance needed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def candidate_mask_ref(
+    rows: jnp.ndarray,  # [n_rows + 1, w] uint32 (last row all-ones neutral)
+    dom_bits: jnp.ndarray,  # [p_pad, w] uint32
+    pos: jnp.ndarray,  # [b] int32 order position per lane
+    row_idx: jnp.ndarray,  # [b, mp] int32 flattened adjacency row per parent
+    used: jnp.ndarray,  # [b, w] uint32
+) -> jnp.ndarray:
+    """``dom[pos] ∧ ¬used ∧ ⋀_j rows[row_idx[:, j]]`` per lane.
+
+    ``row_idx`` entries must already point at the neutral all-ones row for
+    unused parent slots.
+    """
+    cand = dom_bits[pos] & ~used  # [b, w]
+
+    def body(j, c):
+        return c & rows[row_idx[:, j]]
+
+    return lax.fori_loop(0, row_idx.shape[1], body, cand)
+
+
+def adjacency_any_ref(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-row "does ``rows[t] ∧ mask`` have any set bit" — the inner test of
+    RI-DS arc consistency.  Returns ``[n_t]`` int32 in {0, 1}."""
+    return jnp.any((rows & mask[None, :]) != 0, axis=-1).astype(jnp.int32)
+
+
+def popcount_rows_ref(bits: jnp.ndarray) -> jnp.ndarray:
+    """Per-row popcount of ``[n, w]`` uint32 bitmaps -> ``[n]`` int32."""
+    return jnp.sum(lax.population_count(bits), axis=-1).astype(jnp.int32)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Dense causal attention oracle for the flash kernel.
+
+    q/k/v: [BH, S, d]; returns [BH, S, d].
+    """
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (q.shape[-1] ** 0.5)
+    n_q, n_k = s.shape[-2:]
+    mask = jnp.arange(n_q)[:, None] >= jnp.arange(n_k)[None, :]
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def pack_bits_ref(flags: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Pack ``[n]`` {0,1} int32 flags into a ``[w]`` uint32 bitmap."""
+    n = flags.shape[0]
+    padded = jnp.zeros((w * 32,), jnp.uint32).at[:n].set(flags.astype(jnp.uint32))
+    words = padded.reshape(w, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, :]
+    return jnp.sum(words * weights, axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — device count is locked
+at first jax initialization, and only launch/dryrun.py forces the
+512-placeholder-device environment.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The target topology: one v5e pod = (data=16, model=16) = 256 chips;
+    multi-pod adds a leading pod axis: (pod=2, data=16, model=16) = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)}; "
+            "run via launch/dryrun.py (it forces "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh(axes: Sequence[str] = ("data", "model")) -> Mesh:
+    """Trivial mesh over however many devices exist (smoke tests: 1)."""
+    n = len(jax.devices())
+    shape = (n,) + (1,) * (len(axes) - 1)
+    return jax.make_mesh(shape, tuple(axes), devices=jax.devices())
+
+
+def describe(mesh: Mesh) -> str:
+    return f"mesh{dict(mesh.shape)} over {mesh.devices.size} devices"

@@ -1,0 +1,227 @@
+"""Attention: GQA + RoPE with memory-efficient blockwise (flash-style)
+softmax in pure JAX.
+
+The KV sequence is scanned in blocks with an online-softmax carry
+``(m, l, acc)`` in fp32; each block step is wrapped in ``jax.checkpoint`` so
+the backward pass recomputes block scores instead of saving the O(S·S_kv)
+score tensor.  This keeps prefill_32k (and train_4k under remat) inside HBM
+without a custom kernel, and XLA still counts the matmul FLOPs for the
+roofline analysis.
+
+Sharding note (§Perf iteration 1): grouped-query attention is computed by
+**expanding K/V to the full head count** (``jnp.repeat`` over heads) rather
+than reshaping Q to ``[B, KH, G, S, dh]``.  With the production mesh the
+grouped layout's head dims (KH = 8, G = H/KH) do not divide the 16-way
+``model`` axis, so GSPMD replicated the fp32 score tensors on every model
+shard — inflating per-device attention HBM traffic ~16×.  The expanded
+``[B, H, ...]`` layout keeps H (48/64/32 — all divisible by 16) sharded
+end-to-end; the repeated KV blocks are small (kb ≤ 1024) next to the score
+tensors they shard.
+
+Decode uses the same routine with a length-1 query block and a positional
+validity mask, so a sequence-sharded KV cache (logical axis ``seq``) turns
+the softmax reduction into a psum — flash-decoding via GSPMD.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.distributed.shardings import constraint
+
+NEG_INF = -1e30
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: [B, S, H, dh]; positions: [B, S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_block_step(scale, q, q_pos, carry, kv_blk):
+    """One online-softmax step over a KV block.
+
+    q: [B, H, S, dh]; kv_blk: (k [B, H, kb, dh], v, kv_pos [kb]).
+    carry: (m, l, acc) fp32 with shapes [B, H, S(, dh)].
+    """
+    m, l, acc = carry
+    k, v, kv_pos = kv_blk
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((3,), (3,)), ((0, 1), (0, 1))),
+    )  # [B, H, S, kb]
+    s = constraint(s * scale, ("batch", "tensor", None, None))
+    # causal masking; invalid (beyond kv_valid_len) positions carry 2**30
+    mask = q_pos[:, None] >= kv_pos[None, :]
+    s = jnp.where(mask[None, None], s, NEG_INF)
+
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((3,), (2,)), ((0, 1), (0, 1))),
+    )  # [B, H, S, dh]
+    acc_new = acc * alpha[..., None] + pv
+    return (m_new, l_new, acc_new), None
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, dh]
+    k: jnp.ndarray,  # [B, S_kv, KH, dh] (the cache)
+    v: jnp.ndarray,
+    q_offset,  # scalar position of the query token
+    kv_valid_len,  # scalar; kv positions >= len are masked
+) -> jnp.ndarray:
+    """Single-token decode: unblocked grouped attention over the cache.
+
+    §Perf iter 5: the KV-expansion layout regressed decode (the repeated KV
+    blocks dominate when the score tensor is only [B, H, 1, kb]).  Decode
+    instead keeps the grouped [B, KH, G, 1, S] scores — small even at 32k —
+    and leaves the cache unexpanded, so the ``seq``-sharded cache turns the
+    softmax into a psum (flash-decoding via GSPMD).
+    """
+    b, s, h, dh = q.shape
+    _, s_kv, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, s, kh, g, dh)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # [B, KH, G, 1, S_kv]
+    kv_pos = jnp.arange(s_kv, dtype=jnp.int32)
+    mask = (kv_pos[None, :] <= q_offset) & (kv_pos[None, :] < kv_valid_len)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def windowed_attention(
+    q: jnp.ndarray,  # [B, S, H, dh]  (self-attention over the same sequence)
+    k: jnp.ndarray,  # [B, S, KH, dh]
+    v: jnp.ndarray,
+    *,
+    window: int,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Sub-quadratic causal sliding-window attention: O(S · window).
+
+    Scans query chunks; each chunk attends only its ``window + q_chunk``
+    KV neighborhood, sliced with ``dynamic_slice`` — total work O(S·w)
+    instead of O(S²).  This is the opt-in ``attn_window`` long-context
+    variant (EXPERIMENTS.md §Beyond); the assigned full-attention archs keep
+    their mandated ``long_500k`` SKIP.
+    """
+    b, s, h, dh = q.shape
+    _, _, kh, _ = k.shape
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    cq = min(q_chunk, s)
+    assert s % cq == 0, (s, cq)
+    n_chunks = s // cq
+    win = min(window, s)
+    span = win + cq  # kv neighborhood per query chunk
+    scale = 1.0 / np.sqrt(dh)
+
+    kp = jnp.pad(k, ((0, 0), (win, 0), (0, 0), (0, 0)))  # left-pad history
+    vp = jnp.pad(v, ((0, 0), (win, 0), (0, 0), (0, 0)))
+
+    def chunk(ci):
+        q_c = lax.dynamic_slice_in_dim(q, ci * cq, cq, axis=1)
+        k_c = lax.dynamic_slice_in_dim(kp, ci * cq, span, axis=1)
+        v_c = lax.dynamic_slice_in_dim(vp, ci * cq, span, axis=1)
+        sc = jnp.einsum(
+            "bqhd,bkhd->bhqk", q_c.astype(jnp.float32), k_c.astype(jnp.float32)
+        ) * scale
+        q_pos = ci * cq + jnp.arange(cq)
+        k_pos = ci * cq - win + jnp.arange(span)  # global kv positions
+        mask = (
+            (q_pos[:, None] >= k_pos[None, :])
+            & (q_pos[:, None] - k_pos[None, :] < win + 1)
+            & (k_pos[None, :] >= 0)
+        )
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v_c.astype(jnp.float32))
+        return o.astype(q.dtype)
+
+    out = lax.map(jax.checkpoint(chunk), jnp.arange(n_chunks))
+    # [n_chunks, B, cq, H, dh] -> [B, S, H, dh]
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # [B, S, H, dh]
+    k: jnp.ndarray,  # [B, S_kv, KH, dh]
+    v: jnp.ndarray,  # [B, S_kv, KH, dh]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    kv_valid_len: Optional[jnp.ndarray] = None,  # scalar; masks kv >= len
+    kv_block: int = 1024,
+) -> jnp.ndarray:
+    """Grouped-query blockwise attention; returns [B, S, H, dh]."""
+    del causal  # all supported paths are causal (decode masks via positions)
+    b, s, h, dh = q.shape
+    if s == 1:
+        return decode_attention(
+            q, k, v,
+            q_offset if not isinstance(q_offset, int) else jnp.int32(q_offset),
+            kv_valid_len if kv_valid_len is not None else jnp.int32(k.shape[1]),
+        )
+    _, s_kv, kh, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    scale = 1.0 / np.sqrt(dh)
+
+    kb = min(kv_block, s_kv)
+    n_blocks = (s_kv + kb - 1) // kb
+    pad = n_blocks * kb - s_kv
+
+    # expand KV to full head count so the head dim shards over `model`
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+
+    qh = constraint(q.transpose(0, 2, 1, 3), ("batch", "tensor", None, None))
+    kx = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vx = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kx = constraint(kx, ("batch", "tensor", None, None))
+    vx = constraint(vx, ("batch", "tensor", None, None))
+    kx = kx.reshape(b, h, n_blocks, kb, dh).transpose(2, 0, 1, 3, 4)
+    vx = vx.reshape(b, h, n_blocks, kb, dh).transpose(2, 0, 1, 3, 4)
+
+    kv_pos = jnp.arange(n_blocks * kb, dtype=jnp.int32).reshape(n_blocks, kb)
+    valid = kv_pos < (s_kv if kv_valid_len is None else kv_valid_len)
+    kv_pos = jnp.where(valid, kv_pos, jnp.int32(2**30))  # masked = "future"
+    q_pos = q_offset + jnp.arange(s, dtype=jnp.int32)
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, dh), jnp.float32)
+
+    step = functools.partial(_attn_block_step, scale, qh, q_pos)
+    (m, l, acc), _ = lax.scan(jax.checkpoint(step), (m0, l0, a0), (kx, vx, kv_pos))
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)

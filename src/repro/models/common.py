@@ -1,0 +1,114 @@
+"""Shared model substrate: param trees with logical sharding axes, norms,
+initializers, MLPs.
+
+Parameters live in nested dicts of jnp arrays.  Every model module exposes:
+
+  * ``Config`` dataclass (static hyperparameters)
+  * ``init_params(rng, cfg)``     — real arrays (smoke tests / examples)
+  * ``abstract_params(cfg)``      — ShapeDtypeStructs (dry-run lowering)
+  * ``param_logical(cfg)``        — matching pytree of per-dim logical axis
+                                    tuples (see distributed/shardings.py)
+
+``ParamSpec`` triples keep the three views in sync from one declaration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter declaration: shape + logical sharding axes + init scale."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, rng: jax.Array) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else max(1, self.shape[-1])
+        scale = self.scale if self.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(rng, self.shape, jnp.float32) * scale).astype(self.dtype)
+
+
+SpecTree = Dict[str, Any]  # nested dicts of ParamSpec
+
+
+def abstract_from_specs(specs: SpecTree):
+    return jax.tree.map(lambda s: s.abstract(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def logical_from_specs(specs: SpecTree):
+    return jax.tree.map(lambda s: s.logical, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_from_specs(rng: jax.Array, specs: SpecTree):
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    rngs = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [s.materialize(r) for s, r in zip(leaves, rngs)])
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dtype) * gamma + beta
+
+
+def squared_relu(x):
+    """Primer's squared ReLU — nemotron-4's activation."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+}
+
+
+def dot(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Matmul in the activation dtype.
+
+    §Perf iter 5: emitting the dot at fp32 made GSPMD place the
+    tensor-parallel all-reduce on fp32 partials (2× collective and
+    activation bytes per projection).  The MXU accumulates fp32 internally
+    for bf16 operands regardless, so the HLO-level output dtype stays bf16;
+    only cross-shard partial sums lose the extra mantissa — the standard
+    TP trade (Megatron does the same).
+    """
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+    )

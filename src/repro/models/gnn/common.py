@@ -1,0 +1,100 @@
+"""GNN substrate: message passing via ``segment_sum`` over edge indices.
+
+JAX sparse is BCOO-only, so the message-passing primitive here is built from
+first principles (per the brief): gather source-node features along the edge
+list, transform, and scatter-reduce to destinations with
+``jax.ops.segment_sum`` / ``segment_max``.  This substrate also backs the SGE
+engine's roofline comparisons — subgraph enumeration *is* an edge-gather
+workload (DESIGN.md §4).
+
+Edge tensors carry the logical axis ``edge`` (sharded over
+``('pod','data','model')`` when divisible) so the scatter-add becomes a
+cross-shard psum under GSPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constraint
+from repro.models.common import ParamSpec, dot
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphShape:
+    """Static shape of a (possibly batched) graph input."""
+
+    n_nodes: int
+    n_edges: int
+    d_feat: int
+    n_graphs: int = 1  # > 1 for batched small graphs (molecule shape)
+    d_edge_feat: int = 0
+    with_positions: bool = False
+
+
+def segment_sum(data: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments):
+    s = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    cnt = jax.ops.segment_sum(
+        jnp.ones((data.shape[0],), jnp.float32), segment_ids, num_segments=num_segments
+    )
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def segment_max(data, segment_ids, num_segments):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+AGGREGATORS = {"sum": segment_sum, "mean": segment_mean, "max": segment_max}
+
+
+def gather_src(h: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:
+    """Edge-wise gather of source-node features; edge-sharded."""
+    msg = jnp.take(h, src, axis=0)
+    return constraint(msg, ("edge", None))
+
+
+def sym_norm_weights(src: jnp.ndarray, dst: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+    """GCN symmetric normalization 1/sqrt((deg(u)+1)(deg(v)+1)) per edge
+    (self-loops folded into the +1)."""
+    ones = jnp.ones((src.shape[0],), jnp.float32)
+    deg = jax.ops.segment_sum(ones, dst, num_segments=n_nodes) + 1.0
+    return jax.lax.rsqrt(jnp.take(deg, src)) * jax.lax.rsqrt(jnp.take(deg, dst))
+
+
+def mlp_specs(dims: Sequence[int], prefix: str, dtype=jnp.float32) -> Dict[str, ParamSpec]:
+    """Param specs for a plain MLP ``dims[0] -> ... -> dims[-1]``."""
+    out: Dict[str, ParamSpec] = {}
+    for i in range(len(dims) - 1):
+        out[f"{prefix}_w{i}"] = ParamSpec(
+            (dims[i], dims[i + 1]), (None, "tensor" if i == 0 else None), dtype
+        )
+        out[f"{prefix}_b{i}"] = ParamSpec((dims[i + 1],), (None,), dtype, init="zeros")
+    return out
+
+
+def mlp_apply(params: Dict[str, jnp.ndarray], prefix: str, x: jnp.ndarray,
+              n_layers: int, act=jax.nn.relu, final_act: bool = False) -> jnp.ndarray:
+    for i in range(n_layers):
+        x = dot(x, params[f"{prefix}_w{i}"]) + params[f"{prefix}_b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def masked_softmax_ce(logits: jnp.ndarray, labels: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross entropy over nodes; ``labels < 0`` masked out."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), jnp.maximum(labels, 0)[:, None], axis=1
+    )[:, 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, jnp.sum(mask)

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts layer: top-k routing with group-local sort-based
+dispatch.
+
+TPU-native dispatch (no ragged ops), §Perf iteration 6: tokens are split
+into ``dispatch_groups`` contiguous groups aligned with the data shards;
+each group sorts ITS OWN (token, expert-choice) pairs and scatters into its
+slice of the ``[G, E, C_g, D]`` capacity buffer.  Because scatter indices
+never cross a group, GSPMD partitions the scatter trivially along ``G``
+(= the ``batch`` axis) and the only cross-device movement left is the
+``G×E`` transpose feeding the expert einsum — a true all-to-all.  (The
+previous single-group formulation made GSPMD materialize replicated
+scatter buffers and all-reduce 240 GB *per layer* on kimi-k2 — see
+EXPERIMENTS.md §Perf.)
+
+Per-group capacity also matches large-scale practice (local capacity =
+global/G), and the group structure is the MoE echo of the paper's scheduler:
+groups are coalesced task batches, capacity plays ``recv_cap`` (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constraint
+from repro.models.common import ACTIVATIONS, dot
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    capacity_round: int = 64  # round per-group capacity for shardability
+    dispatch_groups: int = 32  # data-shard-aligned dispatch groups (pod×data)
+    router_dtype: str = "float32"
+
+
+def n_groups(cfg: MoEConfig, n_tokens: int) -> int:
+    g = cfg.dispatch_groups
+    while g > 1 and n_tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def capacity(cfg: MoEConfig, n_tokens: int) -> int:
+    """Per-group expert capacity for ``n_tokens`` *per group*."""
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    r = cfg.capacity_round
+    return max(r, ((c + r - 1) // r) * r)
+
+
+def _dispatch_one_group(n_experts, c, top_e, top_w):
+    """Sort-based dispatch within one token group.
+
+    top_e/top_w: [Tg, K].  Returns
+    (e_sorted, pos_sorted, tok_sorted, w_sorted, keep) over the Tg·K pairs.
+    """
+    tg, k = top_e.shape
+    e_flat = top_e.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)
+    w_flat = top_w.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    w_sorted = w_flat[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(tg * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos_sorted < c
+    return e_sorted, pos_sorted, tok_sorted, w_sorted, keep
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # [T, D] flattened tokens
+    router_w: jnp.ndarray,  # [D, E]
+    w_gate: jnp.ndarray,  # [E, D, F]
+    w_up: jnp.ndarray,  # [E, D, F]
+    w_down: jnp.ndarray,  # [E, F, D]
+    cfg: MoEConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [T, D], aux load-balance loss)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = n_groups(cfg, t)
+    tg = t // g
+    c = capacity(cfg, tg)
+
+    # ---- routing ----------------------------------------------------------
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # [T, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    aux = aux_load_balance_loss(logits, top_e, e)
+
+    # ---- group-local sort dispatch -----------------------------------------
+    xg = constraint(x.reshape(g, tg, d), ("batch", None, None))
+    eg = top_e.reshape(g, tg, k)
+    wg = top_w.reshape(g, tg, k).astype(x.dtype)
+    e_s, p_s, tok_s, w_s, keep = jax.vmap(
+        lambda te, tw: _dispatch_one_group(e, c, te, tw)
+    )(eg, wg)
+
+    # gather the dispatched rows first and pin their sharding (G over batch)
+    # — un-constrained, GSPMD replicated this [G, Tg·K, D] tensor per model
+    # shard and resolved the scatter with ~2 TB of all-reduce (§Perf iter 9b)
+    rows_in = jax.vmap(lambda xr, toks: xr[toks])(xg, tok_s)
+    rows_in = constraint(rows_in, ("batch", None, None))
+
+    def scatter_group(rows, es, ps, kp):
+        buf = jnp.zeros((e, c, d), x.dtype)
+        return buf.at[
+            jnp.where(kp, es, e), jnp.where(kp, ps, 0)
+        ].set(rows, mode="drop")
+
+    buf = jax.vmap(scatter_group)(rows_in, e_s, p_s, keep)  # [G, E, C, D]
+    # scatter stays fully group-local, THEN one explicit reshard moves the
+    # buffer from group-major to expert-major sharding — the textbook MoE
+    # all-to-all.  Without the intermediate constraint GSPMD fuses the
+    # reshard into the scatter and resolves it by replicating the buffer
+    # (u32 [TgK, D]-wide all-reduces observed on kimi).
+    buf = constraint(buf, ("batch", None, None, None))
+    buf = constraint(buf, ("batch", "expert", None, None))
+
+    # ---- expert FFN (the G×E transpose here is the MoE all-to-all) ---------
+    # §Perf iter 9: gather the FSDP dim of expert weights at the use site
+    # (otherwise GSPMD all-reduces [G,E,C,F] partial sums over data)
+    w_gate = constraint(w_gate.astype(buf.dtype), ("expert", None, "tensor"))
+    w_up = constraint(w_up.astype(buf.dtype), ("expert", None, "tensor"))
+    w_down = constraint(w_down.astype(buf.dtype), ("expert", "tensor", None))
+    gate = jnp.einsum("gecd,edf->gecf", buf, w_gate)
+    up = jnp.einsum("gecd,edf->gecf", buf, w_up)
+    hidden = jax.nn.silu(gate) * up
+    hidden = constraint(hidden, ("batch", "expert", None, "tensor"))
+    out_buf = jnp.einsum("gecf,efd->gecd", hidden, w_down)
+    out_buf = constraint(out_buf, ("batch", "expert", None, None))
+
+    # ---- combine (group-local gather + weighted scatter-add) ---------------
+    # reshard expert-major -> group-major first (the return all-to-all), so
+    # the row gather below is local per group
+    out_buf = constraint(out_buf, ("batch", None, None, None))
+    rows_out = jax.vmap(
+        lambda ob, es, ps, kp: ob[jnp.where(kp, es, 0), jnp.where(kp, ps, 0)]
+    )(out_buf, e_s, p_s, keep)
+    rows_out = constraint(rows_out, ("batch", None, None))
+    rows_out = rows_out * jnp.where(keep, w_s, 0).astype(rows_out.dtype)[..., None]
+
+    def combine_group(rows, toks):
+        return jnp.zeros((tg, d), x.dtype).at[toks].add(rows)
+
+    out = jax.vmap(combine_group)(rows_out, tok_s)
+    out = constraint(out, ("batch", None, None)).reshape(t, d)
+    return out, aux
+
+
+def aux_load_balance_loss(router_logits: jnp.ndarray, top_e: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (mean fraction × mean prob)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32)
+    ce = jnp.mean(one_hot, axis=0)
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,53 @@
+"""Sparse embedding substrate: lookup + embedding-bag built from
+``jnp.take`` + ``jax.ops.segment_sum`` (JAX has no native EmbeddingBag —
+per the brief, this IS part of the system).
+
+Tables are row-sharded over the mesh ``model`` axis (logical ``tensor``);
+GSPMD turns the gathers into index-broadcast + partial-gather + psum.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constraint
+from repro.models.common import ParamSpec
+
+
+def table_spec(n_rows: int, dim: int, name: str = "table") -> ParamSpec:
+    # rows over tensor (model) axis: the canonical row-wise table sharding
+    return ParamSpec((n_rows, dim), ("tensor", None), jnp.float32, scale=0.01)
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Plain embedding lookup; ids any shape, output ids.shape + [dim]."""
+    return jnp.take(table, jnp.maximum(ids, 0), axis=0)
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,  # [n_ids] flat multi-hot indices
+    bag_ids: jnp.ndarray,  # [n_ids] which bag each id belongs to
+    n_bags: int,
+    mode: str = "sum",
+    weights: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """EmbeddingBag: ragged gather + segment reduce.
+
+    ``ids < 0`` are padding and contribute nothing.
+    """
+    rows = lookup(table, ids)
+    valid = (ids >= 0).astype(rows.dtype)[:, None]
+    if weights is not None:
+        valid = valid * weights[:, None]
+    rows = rows * valid
+    out = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(valid[:, 0], bag_ids, num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    elif mode != "sum":
+        raise ValueError(mode)
+    return constraint(out, ("batch", None))

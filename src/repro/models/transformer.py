@@ -1,0 +1,429 @@
+"""Decoder-only LM transformer: GQA + RoPE + (dense | MoE) FFN.
+
+Covers all five assigned LM architectures (grok-1, kimi-k2, nemotron-4,
+minitron, stablelm) through one config.  Layers are scanned (stacked params,
+``lax.scan``) with per-layer remat — essential both for HBM at train time
+and for keeping the 512-device dry-run HLO small.
+
+Entry points:
+  * ``forward(params, cfg, tokens)``                 → final hidden states
+  * ``loss_fn(params, cfg, batch)``                  → (loss, metrics)
+  * ``prefill(params, cfg, tokens)``                 → (last-pos logits, KV cache)
+  * ``decode_step(params, cfg, cache, tokens, pos)`` → (logits, new cache)
+
+Sharding is declared via logical axes (distributed/shardings.py): FSDP on
+model dims over ``('pod','data')``, tensor parallel on heads / d_ff / vocab /
+experts over ``'model'``; the decode KV cache is sequence-sharded over
+``'model'`` (flash-decoding via GSPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.shardings import constraint
+from repro.models import moe as moe_mod
+from repro.models.attention import apply_rope, blockwise_attention, windowed_attention
+from repro.models.common import (
+    ACTIVATIONS,
+    ParamSpec,
+    abstract_from_specs,
+    dot,
+    init_from_specs,
+    logical_from_specs,
+    rms_norm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    activation: str = "swiglu"  # swiglu | gelu | squared_relu | silu
+    moe: Optional[moe_mod.MoEConfig] = None
+    rope_theta: float = 10000.0
+    max_seq_len: int = 32768
+    attn_window: int = 0  # >0 enables sliding-window attention (opt-in
+    # long-context variant; assigned archs are full-attention, see DESIGN §4)
+    dtype: Any = jnp.bfloat16
+    loss_chunk: int = 2048
+    kv_block: int = 1024
+    remat: bool = True
+    aux_loss_weight: float = 0.01
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def gated(self) -> bool:
+        return self.activation == "swiglu"
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline bookkeeping)."""
+        d, h, kh, dh = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * h * dh + 2 * d * kh * dh + h * dh * d
+        if self.moe:
+            m = self.moe
+            ffn = d * m.n_experts + 3 * m.n_experts * d * m.d_ff_expert
+            ffn += 3 * m.n_shared_experts * d * m.d_ff_expert
+        else:
+            ffn = (3 if self.gated else 2) * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab_size * d + d
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: top-k + shared experts)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        h, kh, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * h * dh + 2 * d * kh * dh + h * dh * d
+        ffn = d * m.n_experts + 3 * (m.top_k + m.n_shared_experts) * d * m.d_ff_expert
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab_size * d + d
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: LMConfig) -> Dict[str, Any]:
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    l, v, f = cfg.n_layers, cfg.vocab_size, cfg.d_ff
+    dt = cfg.dtype
+    layers: Dict[str, ParamSpec] = {
+        "g1": ParamSpec((l, d), (None, None), dt, init="ones"),
+        "g2": ParamSpec((l, d), (None, None), dt, init="ones"),
+        "wq": ParamSpec((l, d, h, dh), (None, "fsdp", "tensor", None), dt),
+        "wk": ParamSpec((l, d, kh, dh), (None, "fsdp", "tensor", None), dt),
+        "wv": ParamSpec((l, d, kh, dh), (None, "fsdp", "tensor", None), dt),
+        "wo": ParamSpec((l, h, dh, d), (None, "tensor", None, "fsdp"), dt),
+    }
+    if cfg.moe:
+        m = cfg.moe
+        e, fe = m.n_experts, m.d_ff_expert
+        # §Perf iter 3: small expert counts (grok: 8) do not divide the
+        # 16-way model axis, so expert-dim sharding degrades to replication
+        # (~19 GB/device of expert weights).  Below 64 experts, tensor-shard
+        # the per-expert FFN dim instead.
+        if e >= 64:
+            log_gate = (None, "expert", "fsdp", None)
+            log_down = (None, "expert", None, "fsdp")
+        else:
+            log_gate = (None, None, "fsdp", "tensor")
+            log_down = (None, None, "tensor", "fsdp")
+        layers.update(
+            router=ParamSpec((l, d, e), (None, "fsdp", None), jnp.float32),
+            we_gate=ParamSpec((l, e, d, fe), log_gate, dt),
+            we_up=ParamSpec((l, e, d, fe), log_gate, dt),
+            we_down=ParamSpec((l, e, fe, d), log_down, dt),
+        )
+        if m.n_shared_experts:
+            fs = m.n_shared_experts * fe
+            layers.update(
+                ws_gate=ParamSpec((l, d, fs), (None, "fsdp", "tensor"), dt),
+                ws_up=ParamSpec((l, d, fs), (None, "fsdp", "tensor"), dt),
+                ws_down=ParamSpec((l, fs, d), (None, "tensor", "fsdp"), dt),
+            )
+    else:
+        if cfg.gated:
+            layers["w_gate"] = ParamSpec((l, d, f), (None, "fsdp", "tensor"), dt)
+        layers["w_up"] = ParamSpec((l, d, f), (None, "fsdp", "tensor"), dt)
+        layers["w_down"] = ParamSpec((l, f, d), (None, "tensor", "fsdp"), dt)
+    return {
+        "embed": ParamSpec((v, d), ("tensor", "fsdp"), dt, scale=1.0),
+        "layers": layers,
+        "final_norm": ParamSpec((d,), (None,), dt, init="ones"),
+        "lm_head": ParamSpec((d, v), ("fsdp", "tensor"), dt),
+    }
+
+
+def abstract_params(cfg: LMConfig):
+    return abstract_from_specs(param_specs(cfg))
+
+
+def param_logical(cfg: LMConfig):
+    return logical_from_specs(param_specs(cfg))
+
+
+def init_params(rng: jax.Array, cfg: LMConfig):
+    return init_from_specs(rng, param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _gather_w(w: jnp.ndarray, logical) -> jnp.ndarray:
+    """Use-site weight gathering (§Perf iter 9).
+
+    FSDP-sharded weights fed straight into a matmul make GSPMD contract over
+    the sharded dim — i.e. partial-sum ALL-REDUCES of [B,S,F] activations
+    (observed: 6 fp32 activation all-reduces per layer + full-logit
+    all-reduces in the loss).  Constraining the weight to its FSDP-free
+    layout at the use site forces the cheap weight all-gather instead
+    (ZeRO-3 semantics: gather params, compute locally, reduce-scatter
+    grads)."""
+    return constraint(w, logical)
+
+
+def _ffn_dense(x: jnp.ndarray, lp: Dict[str, jnp.ndarray], cfg: LMConfig) -> jnp.ndarray:
+    w_up = _gather_w(lp["w_up"], (None, "tensor"))
+    w_down = _gather_w(lp["w_down"], ("tensor", None))
+    if cfg.gated:
+        gate = dot(x, _gather_w(lp["w_gate"], (None, "tensor")))
+        up = dot(x, w_up)
+        hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        act = ACTIVATIONS[cfg.activation]
+        hidden = act(dot(x, w_up).astype(jnp.float32)).astype(x.dtype)
+    hidden = constraint(hidden, ("batch", None, "tensor"))
+    return dot(hidden, w_down)
+
+
+def _ffn_moe(x: jnp.ndarray, lp: Dict[str, jnp.ndarray], cfg: LMConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    out, aux = moe_mod.moe_ffn(
+        flat, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"], cfg.moe
+    )
+    if cfg.moe.n_shared_experts:
+        gate = dot(flat, _gather_w(lp["ws_gate"], (None, "tensor")))
+        up = dot(flat, _gather_w(lp["ws_up"], (None, "tensor")))
+        hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(flat.dtype) * up
+        out = out + dot(hidden, _gather_w(lp["ws_down"], ("tensor", None)))
+    return out.reshape(b, s, d), aux
+
+
+def _attention(
+    x: jnp.ndarray,
+    lp: Dict[str, jnp.ndarray],
+    cfg: LMConfig,
+    positions: jnp.ndarray,
+    cache_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """GQA attention.  With ``cache_kv`` given, runs incremental decode:
+    writes this step's K/V at ``cache_len`` and attends over the cache."""
+    wq = _gather_w(lp["wq"], (None, "tensor", None))
+    wk = _gather_w(lp["wk"], (None, "tensor", None))
+    wv = _gather_w(lp["wv"], (None, "tensor", None))
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    q = constraint(q, ("batch", None, "tensor", None))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache_kv is not None:
+        ck, cv = cache_kv  # [B, S_max, KH, dh]
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
+        ck = constraint(ck, ("batch", "seq", None, None))
+        cv = constraint(cv, ("batch", "seq", None, None))
+        new_cache = (ck, cv)
+        out = blockwise_attention(
+            q, ck, cv,
+            causal=True,
+            q_offset=cache_len,
+            kv_valid_len=cache_len + q.shape[1],
+            kv_block=cfg.kv_block,
+        )
+    elif cfg.attn_window and q.shape[1] > 1:
+        out = windowed_attention(
+            q, k, v, window=cfg.attn_window, q_chunk=min(cfg.kv_block, q.shape[1])
+        )
+    else:
+        out = blockwise_attention(q, k, v, causal=True, kv_block=cfg.kv_block)
+    wo = _gather_w(lp["wo"], ("tensor", None, None))
+    return jnp.einsum("bshk,hkd->bsd", out, wo), new_cache
+
+
+def _layer(
+    cfg: LMConfig,
+    carry: Tuple[jnp.ndarray, jnp.ndarray],
+    lp: Dict[str, jnp.ndarray],
+    positions: jnp.ndarray,
+    layer_cache=None,
+    cache_len=None,
+):
+    h, aux = carry
+    a, new_cache = _attention(
+        rms_norm(h, lp["g1"]), lp, cfg, positions, layer_cache, cache_len
+    )
+    h = h + a
+    h = constraint(h, ("batch", None, None))
+    m = rms_norm(h, lp["g2"])
+    if cfg.moe:
+        f, aux_l = _ffn_moe(m, lp, cfg)
+        aux = aux + aux_l
+    else:
+        f = _ffn_dense(m, lp, cfg)
+    h = h + f
+    h = constraint(h, ("batch", None, None))
+    return (h, aux), new_cache
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def forward(
+    params, cfg: LMConfig, tokens: jnp.ndarray, positions: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token ids -> final (normed) hidden states.  Returns (hidden, aux_loss)."""
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    h = constraint(h, ("batch", None, None))
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, lp):
+        out, _ = _layer(cfg, carry, lp, positions)
+        return out, None
+
+    step = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if cfg.remat else body
+    (h, aux), _ = lax.scan(step, (h, jnp.zeros((), jnp.float32)), params["layers"])
+    return rms_norm(h, params["final_norm"]), aux
+
+
+def lm_loss(
+    hidden: jnp.ndarray, head: jnp.ndarray, labels: jnp.ndarray, chunk: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked cross-entropy: logits are materialized ``chunk`` tokens at a
+    time (vocab stays tensor-sharded), never as a full [T, V] tensor."""
+    b, s, d = hidden.shape
+    t = b * s
+    hf = hidden.reshape(t, d)
+    yf = labels.reshape(t)
+    chunk = min(chunk, t)
+    n_chunks = (t + chunk - 1) // chunk
+    pad = n_chunks * chunk - t
+    hf = jnp.pad(hf, ((0, pad), (0, 0)))
+    yf = jnp.pad(yf, (0, pad), constant_values=-1)
+
+    head = constraint(head, (None, "tensor"))  # §Perf iter 9: gather FSDP dim
+
+    def one(args):
+        hc, yc = args
+        hc = constraint(hc, ("batch", None))
+        logits = jnp.einsum(
+            "td,dv->tv", hc.astype(jnp.float32),
+            constraint(head.astype(jnp.float32), (None, "tensor")),
+        )
+        # §Perf iter 10: without this pin, GSPMD replicated the whole logits
+        # matmul on every device inside the loss scan (16× the flops)
+        logits = constraint(logits, ("batch", "tensor"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # §Perf iter 8: gold-logit extraction via mask-sum, NOT
+        # take_along_axis — gathering along the tensor-sharded vocab dim made
+        # GSPMD all-reduce the full fp32 logits chunk (8.4 GB × chunks × fwd
+        # +bwd ≈ 270 GB/step/device of collective on the 256k vocabs); the
+        # masked sum reduces over the sharded axis, so only [chunk] scalars
+        # cross devices.
+        vocab_iota = jnp.arange(logits.shape[1], dtype=jnp.int32)
+        onehot = (vocab_iota[None, :] == jnp.maximum(yc, 0)[:, None])
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=1)
+        mask = (yc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    sums, cnts = lax.map(
+        jax.checkpoint(one),
+        (hf.reshape(n_chunks, chunk, d), yf.reshape(n_chunks, chunk)),
+    )
+    total, count = jnp.sum(sums), jnp.sum(cnts)
+    return total / jnp.maximum(count, 1.0), count
+
+
+def loss_fn(params, cfg: LMConfig, batch: Dict[str, jnp.ndarray]):
+    hidden, aux = forward(params, cfg, batch["tokens"])
+    loss, count = lm_loss(hidden, params["lm_head"], batch["labels"], cfg.loss_chunk)
+    total = loss + (cfg.aux_loss_weight * aux / cfg.n_layers if cfg.moe else 0.0)
+    return total, {"lm_loss": loss, "aux_loss": aux, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: Optional[int] = None):
+    s = max_len or cfg.max_seq_len
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return (
+        jax.ShapeDtypeStruct(shape, cfg.dtype),
+        jax.ShapeDtypeStruct(shape, cfg.dtype),
+    )
+
+
+CACHE_LOGICAL = ((None, "batch", "seq", None, None), (None, "batch", "seq", None, None))
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray, max_len: Optional[int] = None):
+    """Full-sequence forward that also materializes the KV cache.
+
+    Returns (last-position logits [B, V], cache (k, v) [L, B, S_max, KH, dh]).
+    """
+    b, s = tokens.shape
+    s_max = max_len or cfg.max_seq_len
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    zero_cache = (
+        jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    )
+
+    def body(carry, lp):
+        out, cache = _layer(cfg, carry, lp, positions, zero_cache, jnp.int32(0))
+        return out, cache
+
+    step = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if cfg.remat else body
+    (h, _), cache = lax.scan(step, (h, jnp.zeros((), jnp.float32)), params["layers"])
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum(
+        "bd,dv->bv", h[:, -1].astype(jnp.float32), params["lm_head"].astype(jnp.float32)
+    )
+    return logits, cache
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens: jnp.ndarray, cache_len: jnp.ndarray):
+    """One incremental decode step.
+
+    Args:
+      cache: (k, v) each [L, B, S_max, KH, dh].
+      tokens: [B, 1] current token ids.
+      cache_len: scalar int32 — number of valid cache positions.
+
+    Returns: (logits [B, V], new cache).
+    """
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(cache_len[None, None], (b, s)).astype(jnp.int32)
+
+    def body(carry, xs):
+        lp, lc = xs
+        out, new_cache = _layer(cfg, carry, lp, positions, lc, cache_len)
+        return out, new_cache
+
+    (h, _), new_cache = lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), (params["layers"], cache)
+    )
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum(
+        "bd,dv->bv", h[:, -1].astype(jnp.float32), params["lm_head"].astype(jnp.float32)
+    )
+    return logits, new_cache

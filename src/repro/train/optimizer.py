@@ -1,0 +1,116 @@
+"""In-house AdamW with ZeRO-style sharded states and LR schedules.
+
+No optax in this environment, so the optimizer is implemented directly:
+
+* ``adamw_init / adamw_update`` — decoupled weight decay, fp32 moments.
+* Moments inherit the parameter's logical sharding **plus** FSDP
+  (``('pod','data')``) on the first shardable dim — ZeRO-1 semantics fall out
+  of GSPMD: the reduce-scatter/all-gather pair around the update is inserted
+  automatically when the gradient sharding (batch-reduced, replicated) meets
+  the state sharding.
+* ``cosine_schedule / linear_warmup`` — standard LR schedules.
+* Global-norm clipping in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: Any  # pytree like params, fp32
+    nu: Any  # pytree like params, fp32
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to ``min_lr_ratio * lr``."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_state(abstract_params) -> AdamWState:
+    z = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params
+    )
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=z,
+        nu=jax.tree.map(lambda x: x, z),
+    )
+
+
+def state_logical(param_logical) -> AdamWState:
+    """Moments share the parameter logical axes (FSDP included)."""
+    return AdamWState(step=(), mu=param_logical, nu=jax.tree.map(lambda x: x, param_logical))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def update(
+    cfg: AdamWConfig, grads, state: AdamWState, params
+) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) if cfg.grad_clip else 1.0
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        p32 = p.astype(jnp.float32)
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        return (p32 - lr * step_).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([x[0] for x in new])
+    new_m = treedef.unflatten([x[1] for x in new])
+    new_v = treedef.unflatten([x[2] for x in new])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

@@ -1,0 +1,63 @@
+"""Shared test fixtures and strategies.
+
+NOTE: no XLA_FLAGS here — tests must see the real (1-device) platform; only
+launch/dryrun.py forces the 512-placeholder-device environment.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+
+
+def random_graph(rng, n, m, n_labels=1, n_elabs=1, undirected=True) -> Graph:
+    edges = set()
+    tries = 0
+    while len(edges) < m and tries < 40 * m:
+        u, v = rng.integers(0, n, 2)
+        tries += 1
+        if u == v:
+            continue
+        if (u, v) in edges or (undirected and (v, u) in edges):
+            continue
+        edges.add((int(u), int(v)))
+    edges = sorted(edges)
+    return Graph.from_edges(
+        n,
+        edges,
+        labels=rng.integers(0, n_labels, n),
+        edge_labels=rng.integers(0, n_elabs, len(edges)),
+        undirected=undirected,
+    )
+
+
+def extract_connected_pattern(rng, g: Graph, n_nodes: int) -> Graph:
+    start = int(rng.integers(g.n))
+    nodes = [start]
+    seen = {start}
+    while len(nodes) < n_nodes:
+        frontier = set()
+        for u in nodes:
+            frontier |= set(g.neighbors(u).tolist())
+        frontier -= seen
+        if not frontier:
+            break
+        nxt = int(rng.choice(sorted(frontier)))
+        nodes.append(nxt)
+        seen.add(nxt)
+    idx = {u: i for i, u in enumerate(nodes)}
+    edges, elabs = [], []
+    for u, v, l in zip(g.src.tolist(), g.dst.tolist(), g.edge_labels.tolist()):
+        if u in idx and v in idx:
+            edges.append((idx[u], idx[v]))
+            elabs.append(l)
+    return Graph.from_edges(
+        len(nodes), edges, labels=g.labels[nodes], edge_labels=elabs
+    )
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,131 @@
+"""Soundness of the preprocessing prunings (domains, AC, FC, orderings).
+
+The invariant behind every pruning in the paper: no pruning may remove a
+target node from a domain if that node participates in a true match at that
+pattern position.  Verified against brute-force enumeration of all matches.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import domains as dom_mod
+from repro.core import ordering as ord_mod
+from repro.core.graph import Graph, PackedGraph, bitmap_to_indices, popcount
+from repro.core.ref import ref_enumerate
+from tests.conftest import extract_connected_pattern, random_graph
+
+
+def all_matches(pattern, target):
+    """All match mappings (pattern node -> target node), via the oracle."""
+    res = ref_enumerate(pattern, target, variant="ri", record_mappings=True)
+    from repro.core.plan import build_plan
+
+    plan = build_plan(pattern, PackedGraph.from_graph(target), variant="ri")
+    # mappings are in order-position space; convert to pattern-node space
+    out = []
+    for m in res.mappings:
+        node_map = {}
+        for pos, t in enumerate(m):
+            node_map[int(plan.order[pos])] = t
+        out.append(node_map)
+    return out
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_domain_pipeline_soundness(seed):
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, 12, 26, n_labels=2)
+    pat = extract_connected_pattern(rng, tgt, 3)
+    if pat.m == 0:
+        return
+    packed = PackedGraph.from_graph(tgt)
+    matches = all_matches(pat, tgt)
+    for use_ac, use_fc in [(False, False), (True, False), (True, True)]:
+        res = dom_mod.compute_domains(pat, packed, use_ac=use_ac, use_fc=use_fc)
+        if matches:
+            assert res.satisfiable
+            for m in matches:
+                for p, t in m.items():
+                    dom = set(bitmap_to_indices(res.bits[p]).tolist())
+                    assert t in dom, (
+                        f"pruning removed true-match node {t} from D({p}) "
+                        f"(ac={use_ac}, fc={use_fc})"
+                    )
+
+
+def test_ac_reduces_domains():
+    # path pattern in a star target: leaves can't host the middle node
+    tgt = Graph.from_edges(5, [(0, 1), (0, 2), (0, 3), (0, 4)], undirected=True)
+    pat = Graph.from_edges(3, [(0, 1), (1, 2)], undirected=True)
+    packed = PackedGraph.from_graph(tgt)
+    d0 = dom_mod.initial_domains(pat, packed)
+    dac = dom_mod.arc_consistency(pat, packed, d0)
+    assert dac.satisfiable
+    assert popcount(dac.bits).sum() <= popcount(d0).sum()
+    # middle pattern node (degree 2) can only map to the hub
+    mid = int(np.argmax(pat.degrees()))
+    assert bitmap_to_indices(dac.bits[mid]).tolist() == [0]
+
+
+def test_fc_removes_singleton_targets():
+    bits = np.zeros((3, 1), dtype=np.uint32)
+    bits[0, 0] = 0b001  # singleton {0}
+    bits[1, 0] = 0b011  # {0,1}
+    bits[2, 0] = 0b111  # {0,1,2}
+    res = dom_mod.forward_check_singletons(bits)
+    assert res.satisfiable
+    assert res.bits[0, 0] == 0b001
+    assert res.bits[1, 0] == 0b010  # 0 removed -> singleton {1}
+    assert res.bits[2, 0] == 0b100  # 0 and 1 removed
+
+
+def test_fc_detects_collision():
+    bits = np.zeros((2, 1), dtype=np.uint32)
+    bits[0, 0] = 0b01
+    bits[1, 0] = 0b01  # same singleton target
+    res = dom_mod.forward_check_singletons(bits)
+    assert not res.satisfiable
+
+
+def test_ordering_properties(rng):
+    tgt = random_graph(rng, 20, 50, n_labels=2)
+    pat = extract_connected_pattern(rng, tgt, 5)
+    if pat.m == 0:
+        pytest.skip("empty pattern")
+    ordering = ord_mod.greatest_constraint_first(pat)
+    # permutation of all pattern nodes
+    assert sorted(ordering.order.tolist()) == list(range(pat.n))
+    # every non-root position of a connected pattern has >= 1 parent
+    for i in range(1, ordering.n):
+        assert len(ordering.parents[i]) >= 1
+    # parents reference earlier positions only
+    for i, plist in enumerate(ordering.parents):
+        for (j, d, l) in plist:
+            assert 0 <= j < i
+    # parent constraints cover every pattern edge exactly once
+    n_constraints = sum(len(p) for p in ordering.parents)
+    n_nonloop = sum(1 for u, v in zip(pat.src, pat.dst) if u != v)
+    assert n_constraints == n_nonloop
+
+
+def test_si_tiebreak_prefers_small_domain():
+    # two symmetric candidates; domain sizes break the tie
+    pat = Graph.from_edges(3, [(0, 1), (0, 2)], undirected=True)
+    sizes = np.array([5, 7, 2])
+    ordering = ord_mod.greatest_constraint_first(pat, domain_sizes=sizes)
+    # node 0 has max degree; between 1 and 2 (tied w_m, w_n, deg), node 2
+    # (smaller domain) must come first
+    assert ordering.order.tolist() == [0, 2, 1]
+    ordering_plain = ord_mod.greatest_constraint_first(pat)
+    assert ordering_plain.order.tolist() == [0, 1, 2]  # id tie-break
+
+
+def test_singleton_first_placement():
+    pat = Graph.from_edges(3, [(0, 1), (1, 2)], undirected=True)
+    sizes = np.array([4, 4, 1])
+    ordering = ord_mod.greatest_constraint_first(
+        pat, domain_sizes=sizes, singleton_first=True
+    )
+    assert ordering.order[0] == 2

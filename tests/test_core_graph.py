@@ -1,0 +1,68 @@
+"""Unit tests: graph representations and bitmap helpers."""
+
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    Graph,
+    PackedGraph,
+    bitmap_from_indices,
+    bitmap_to_indices,
+    n_words,
+    popcount,
+)
+
+
+def test_bitmap_roundtrip(rng):
+    for n in (1, 31, 32, 33, 100, 1000):
+        idx = np.unique(rng.integers(0, n, size=min(n, 37)))
+        bits = bitmap_from_indices(idx, n)
+        back = bitmap_to_indices(bits)
+        assert np.array_equal(np.sort(idx), back)
+        assert popcount(bits[None, :])[0] == len(idx)
+
+
+def test_popcount_matrix(rng):
+    bits = rng.integers(0, 2**32, size=(7, 5), dtype=np.uint32)
+    expect = np.array(
+        [sum(bin(int(w)).count("1") for w in row) for row in bits]
+    )
+    assert np.array_equal(popcount(bits), expect)
+
+
+def test_adjacency_bitmaps_directed():
+    g = Graph.from_edges(4, [(0, 1), (1, 2), (3, 0)], edge_labels=[0, 1, 0])
+    p = PackedGraph.from_graph(g)
+    assert p.n_edge_labels == 2
+    # out: label 0: 0->1, 3->0
+    assert bitmap_to_indices(p.adj_bits[0, 0, 0]).tolist() == [1]
+    assert bitmap_to_indices(p.adj_bits[0, 0, 3]).tolist() == [0]
+    # label 1: 1->2
+    assert bitmap_to_indices(p.adj_bits[1, 0, 1]).tolist() == [2]
+    # in rows: adj_in[l, u] bit v iff v->u
+    assert bitmap_to_indices(p.adj_bits[0, 1, 1]).tolist() == [0]
+    assert bitmap_to_indices(p.adj_bits[1, 1, 2]).tolist() == [1]
+
+
+def test_degrees_and_neighbors():
+    g = Graph.from_edges(3, [(0, 1), (1, 2)], undirected=True)
+    assert g.out_degrees().tolist() == [1, 2, 1]
+    assert g.in_degrees().tolist() == [1, 2, 1]
+    assert set(g.neighbors(1).tolist()) == {0, 2}
+    assert g.has_edge(0, 1) and g.has_edge(1, 0) and not g.has_edge(0, 2)
+
+
+def test_pad_words():
+    g = Graph.from_edges(3, [(0, 1)], undirected=True)
+    p = PackedGraph.from_graph(g, pad_words_to=128)
+    assert p.w == 128
+    assert p.adj_bits.shape[-1] == 128
+    # padding bits must stay zero
+    assert p.adj_bits[:, :, :, 1:].sum() == 0
+
+
+def test_n_words():
+    assert n_words(0) == 1
+    assert n_words(1) == 1
+    assert n_words(32) == 1
+    assert n_words(33) == 2

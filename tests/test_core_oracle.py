@@ -1,0 +1,110 @@
+"""The reproduction gate: engine == sequential oracle == brute force.
+
+Hypothesis property tests over random labeled directed/undirected graphs,
+all four algorithm variants, multiple worker/width configurations.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, PackedGraph, enumerate_subgraphs
+from repro.core.ref import brute_force_count, ref_enumerate
+from tests.conftest import extract_connected_pattern, random_graph
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(6, 24),
+    density=st.floats(1.0, 2.5),
+    n_labels=st.integers(1, 3),
+    n_elabs=st.integers(1, 2),
+    undirected=st.booleans(),
+    pat_nodes=st.integers(2, 4),
+    variant=st.sampled_from(["ri", "ri-ds-si-fc"]),
+)
+def test_engine_matches_oracle(seed, n, density, n_labels, n_elabs, undirected, pat_nodes, variant):
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, n, int(n * density), n_labels, n_elabs, undirected)
+    pat = extract_connected_pattern(rng, tgt, pat_nodes)
+    if pat.m == 0:
+        return
+    ref = ref_enumerate(pat, tgt, variant=variant)
+    res = enumerate_subgraphs(pat, tgt, variant=variant, n_workers=4, expand_width=2)
+    assert res.matches == ref.matches
+    assert res.states == ref.states
+    assert res.matches >= 1  # extracted subgraph must occur
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(4, 7),
+    pat_nodes=st.integers(2, 3),
+)
+def test_brute_force_agreement(seed, n, pat_nodes):
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, n, n + 2, n_labels=2)
+    pat = extract_connected_pattern(rng, tgt, pat_nodes)
+    if pat.m == 0:
+        return
+    bf = brute_force_count(pat, tgt)
+    for variant in ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc"):
+        ref = ref_enumerate(pat, tgt, variant=variant)
+        assert ref.matches == bf, variant
+        res = enumerate_subgraphs(pat, tgt, variant=variant, n_workers=2, expand_width=2)
+        assert res.matches == bf, variant
+
+
+def test_worker_config_invariance(rng):
+    """Match/state counts must not depend on parallel configuration."""
+    tgt = random_graph(rng, 30, 70, n_labels=2)
+    pat = extract_connected_pattern(rng, tgt, 4)
+    base = None
+    packed = PackedGraph.from_graph(tgt)
+    for v, e, steal in [(1, 1, False), (1, 8, False), (4, 2, True),
+                        (16, 4, True), (16, 4, False), (8, 1, True)]:
+        res = enumerate_subgraphs(
+            pat, packed, variant="ri-ds-si-fc",
+            n_workers=v, expand_width=e, work_stealing=steal,
+        )
+        if base is None:
+            base = (res.matches, res.states)
+        assert (res.matches, res.states) == base, (v, e, steal)
+
+
+def test_unsatisfiable_label():
+    """Pattern label absent from target -> zero matches, zero search."""
+    from repro.core.graph import Graph
+
+    tgt = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3)], labels=[0, 0, 0, 0],
+                           undirected=True)
+    pat = Graph.from_edges(2, [(0, 1)], labels=[1, 0], undirected=True)
+    res = enumerate_subgraphs(pat, tgt, variant="ri-ds")
+    assert res.matches == 0
+
+
+def test_mapping_materialization(rng):
+    """collect_matches records valid mappings."""
+    tgt = random_graph(rng, 12, 24, n_labels=1)
+    pat = extract_connected_pattern(rng, tgt, 3)
+    if pat.m == 0:
+        pytest.skip("empty pattern")
+    res = enumerate_subgraphs(
+        pat, tgt, variant="ri", n_workers=2, expand_width=2, collect_matches=64,
+    )
+    buf = res.engine.match_buf
+    assert buf is not None
+    recorded = buf[buf[:, :, 0] >= 0]
+    n_rec = int((buf[:, :, : pat.n] >= 0).all(axis=-1).sum())
+    assert n_rec == min(res.matches, n_rec)  # ring buffer holds <= matches
+    # each recorded mapping is injective
+    from repro.core.plan import build_plan
+    from repro.core.graph import PackedGraph
+
+    for w in range(buf.shape[0]):
+        for i in range(buf.shape[1]):
+            row = buf[w, i, : pat.n]
+            if (row >= 0).all():
+                assert len(set(row.tolist())) == pat.n

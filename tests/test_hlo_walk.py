@@ -1,0 +1,98 @@
+"""HLO walker: loop-corrected accounting must match cost_analysis on
+loop-free programs and multiply scan bodies by trip counts."""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+sys.path.insert(0, ".")
+from benchmarks import hlo_analysis, hlo_walk  # noqa: E402
+
+
+def test_flat_matches_cost_analysis():
+    x = jnp.ones((64, 64), jnp.float32)
+
+    def f(x):
+        return (x @ x) @ (x @ x.T)
+
+    c = jax.jit(f).lower(x).compile()
+    ca = c.cost_analysis()
+    aw = hlo_walk.analyze(c.as_text())
+    assert aw["flops"] == pytest.approx(ca["flops"], rel=1e-6)
+    assert aw["bytes"] == pytest.approx(ca["bytes accessed"], rel=1e-6)
+
+
+def test_scan_trip_multiplication():
+    x = jnp.ones((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+
+        out, _ = lax.scan(body, x, None, length=8)
+        return out
+
+    c = jax.jit(f).lower(x).compile()
+    aw = hlo_walk.analyze(c.as_text())
+    assert aw["flops"] == pytest.approx(8 * 2 * 64**3, rel=0.01)
+
+
+def test_nested_scan():
+    x = jnp.ones((32, 32), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ d, None
+
+            d, _ = lax.scan(inner, c, None, length=5)
+            return d, None
+
+        out, _ = lax.scan(outer, x, None, length=3)
+        return out
+
+    c = jax.jit(f).lower(x).compile()
+    aw = hlo_walk.analyze(c.as_text())
+    assert aw["flops"] == pytest.approx(15 * 2 * 32**3, rel=0.01)
+
+
+def test_dynamic_loop_flagged():
+    def f(x):
+        def cond(c):
+            return jnp.sum(c) < 1e6
+
+        def body(c):
+            return c @ c
+
+        return lax.while_loop(cond, body, x)
+
+    x = jnp.full((16, 16), 1.1, jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    aw = hlo_walk.analyze(c.as_text())
+    assert aw["n_dynamic_loops"] >= 1
+    assert aw["flops"] >= 2 * 16**3  # body counted at least once
+
+
+def test_collective_regex_kinds():
+    text = """
+HloModule m
+ENTRY %main.1 (p0: f32[128]) -> f32[128] {
+  %p0 = f32[128]{0} parameter(0)
+  %ar = f32[128]{0} all-reduce(%p0), replica_groups={}, to_apply=%add.1
+  ROOT %ag = f32[128]{0} all-gather(%ar), dimensions={0}
+}
+"""
+    cb = hlo_analysis.collective_bytes(text)
+    assert cb["all-reduce"] == 512
+    assert cb["all-gather"] == 512
+    assert cb["total"] == 1024
+
+
+def test_shape_bytes():
+    assert hlo_walk.shape_bytes("f32[10,10]{1,0}") == 400
+    assert hlo_walk.shape_bytes("bf16[8]") == 16
+    assert hlo_walk.shape_bytes("(s32[], f32[4])") == 20
+    assert hlo_walk.shape_bytes("u32[2,2]") == 16

@@ -1,0 +1,75 @@
+"""Work-stealing scheduler invariants (plan_steals / balance_assignment)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler
+from repro.core.scheduler import StealPolicy, plan_steals, receiver_workers
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    sizes=st.lists(st.integers(0, 40), min_size=2, max_size=32),
+    chunk=st.integers(1, 8),
+    keep=st.integers(0, 4),
+    cap=st.integers(1, 8),
+)
+def test_plan_steals_invariants(sizes, chunk, keep, cap):
+    policy = StealPolicy(steal_chunk=chunk, keep_min=keep, recv_cap=cap)
+    s = jnp.asarray(sizes, jnp.int32)
+    donate, accepted, dest_rank, dest_pos = (
+        np.asarray(x) for x in plan_steals(s, policy)
+    )
+    sizes_np = np.asarray(sizes)
+    hungry = sizes_np == 0
+    n_recv = hungry.sum()
+
+    # donors never drop below keep_min; only > keep_min donate
+    assert np.all(donate <= np.maximum(sizes_np - keep, 0))
+    assert np.all(donate[sizes_np <= keep] == 0)
+    assert np.all(donate <= chunk)
+    # accepted is a prefix of the offer
+    assert np.all(accepted <= donate)
+    # work conservation: every accepted slot has a destination rank
+    n_assigned = (dest_rank >= 0).sum()
+    assert n_assigned == accepted.sum()
+    if n_recv == 0:
+        assert accepted.sum() == 0
+        return
+    # receivers capped
+    ranks, counts = np.unique(dest_rank[dest_rank >= 0], return_counts=True)
+    assert np.all(counts <= cap)
+    assert np.all(ranks < n_recv)
+    # intake positions unique per rank
+    for r in ranks:
+        pos = dest_pos[dest_rank == r]
+        assert len(set(pos.tolist())) == len(pos)
+
+
+def test_receiver_workers():
+    s = jnp.asarray([3, 0, 5, 0, 0], jnp.int32)
+    wor = np.asarray(receiver_workers(s))
+    assert wor[:3].tolist() == [1, 3, 4]
+    assert np.all(wor[3:] == -1)
+
+
+def test_balance_assignment_beats_roundrobin(rng):
+    w = rng.pareto(1.5, size=64) + 0.1  # heavy-tailed like subgraph work
+    n = 8
+    lpt = scheduler.balance_assignment(w, n)
+    rr = np.arange(64) % n
+    assert scheduler.imbalance(w, lpt, n) <= scheduler.imbalance(w, rr, n) + 1e-9
+    # LPT guarantee: makespan <= 4/3 * OPT; OPT >= max(mean load, max item)
+    mean_load = w.sum() / n
+    opt_lb = max(mean_load, w.max())
+    makespan = np.bincount(lpt, weights=w, minlength=n).max()
+    assert makespan <= 4.0 / 3.0 * opt_lb + 1e-9
+
+
+def test_balance_assignment_covers_all_shards(rng):
+    w = np.ones(16)
+    out = scheduler.balance_assignment(w, 4)
+    assert sorted(np.unique(out).tolist()) == [0, 1, 2, 3]
+    assert np.all(np.bincount(out, minlength=4) == 4)

@@ -1,0 +1,58 @@
+"""Logical-axis sharding rules."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.shardings import logical_to_pspec, named_sharding, tree_shardings
+from repro.launch.mesh import make_local_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_local_mesh(("data", "model"))
+
+
+def test_divisibility_fallback(mesh):
+    # 1-device mesh: every axis product is 1 -> replicated
+    spec = logical_to_pspec(("batch", "tensor"), (8, 16), mesh)
+    assert spec == P(None, None)
+
+
+def test_axis_mapping_shapes():
+    """On a fake multi-axis mesh-shape dict, verify divisibility logic via a
+    stub mesh object."""
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    spec = logical_to_pspec(("batch", None, "tensor"), (256, 7, 4096), FakeMesh())
+    assert spec == P(("pod", "data"), None, "model")
+    # not divisible by 32 -> replicated
+    spec = logical_to_pspec(("batch",), (100,), FakeMesh())
+    assert spec == P(None)
+    # divisible by model=16
+    spec = logical_to_pspec(("tensor",), (48,), FakeMesh())
+    assert spec == P("model")
+    # edge axis flattens three mesh axes when divisible by 512
+    spec = logical_to_pspec(("edge",), (1024,), FakeMesh())
+    assert spec == P(("pod", "data", "model"))
+    # axis used once only
+    spec = logical_to_pspec(("batch", "fsdp"), (32, 32), FakeMesh())
+    assert spec[0] == ("pod", "data")
+    assert spec[1] is None  # pod/data already consumed
+
+
+def test_tree_shardings_structure(mesh):
+    abstract = {"a": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                "b": (jax.ShapeDtypeStruct((2,), jnp.int32),)}
+    logical = {"a": ("batch", None), "b": ((None,),)}
+    out = tree_shardings(logical, abstract, mesh)
+    assert set(out.keys()) == {"a", "b"}
+    assert out["a"].spec == P(None, None)  # 4 not divisible by ndev? 1-dev -> repl
+
+
+def test_scalar_logical(mesh):
+    s = named_sharding((), (), mesh)
+    assert s.spec == P()
