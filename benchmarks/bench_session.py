@@ -1,0 +1,100 @@
+"""Session-level benchmark: prove re-compilation is gone.
+
+  PYTHONPATH=src python -m benchmarks.bench_session [--patterns N]
+
+Runs ``N >= 32`` same-bucket patterns against one target three ways —
+per-call ``enumerate_subgraphs`` (the old one-shot API), session
+``run`` and session ``run_batch`` — and checks:
+
+  * the session triggers **<= 2 engine compilations** total (one single
+    engine + one vmapped batch engine) for the whole corpus, counted by the
+    `Enumerator`'s own cache counters;
+  * every session count matches ``enumerate_subgraphs`` exactly.
+
+Emits CSV rows (name, us_per_query, derived) and a JSON artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+try:
+    from benchmarks import common
+except ImportError:  # executed from an arbitrary cwd
+    import repro.bench  # noqa: F401  (puts the repo root on sys.path)
+    from benchmarks import common
+
+from repro.core import EngineConfig, Enumerator, SubgraphIndex, enumerate_subgraphs
+from repro.data import graphgen
+
+
+def run(n_patterns: int = 32, seed: int = 7) -> dict:
+    tgt = graphgen.random_graph(120, 600, n_labels=6, seed=seed)
+    pats = [graphgen.extract_pattern(tgt, 4 + (i % 5), seed=seed + 1 + i)
+            for i in range(n_patterns)]
+    cfg = EngineConfig(n_workers=8, expand_width=4)
+
+    # --- old one-shot API, fresh pack+plan per call (baseline) -------------
+    t0 = time.perf_counter()
+    base = [enumerate_subgraphs(p, tgt, config=cfg) for p in pats]
+    t_oneshot = time.perf_counter() - t0
+
+    # --- session: prepare once, run each --------------------------------
+    session = Enumerator(SubgraphIndex.build(tgt), config=cfg)
+    t0 = time.perf_counter()
+    queries = [session.prepare(p, name=f"q{i}") for i, p in enumerate(pats)]
+    singles = [session.run(q) for q in queries]
+    t_single = time.perf_counter() - t0
+    compiles_after_single = session.cache_info()["compiles"]
+
+    # --- session: vmapped batch path -------------------------------------
+    t0 = time.perf_counter()
+    batch = session.run_batch(queries, pack_size=8)
+    t_batch = time.perf_counter() - t0
+    info = session.cache_info()
+
+    for b, s, m in zip(base, singles, batch):
+        assert (b.matches, b.states) == (s.matches, s.states), "run() mismatch"
+        assert (b.matches, b.states) == (m.matches, m.states), "run_batch() mismatch"
+    assert info["compiles"] <= 2, (
+        f"expected <= 2 engine compilations for {n_patterns} same-bucket "
+        f"patterns, got {info['compiles']}"
+    )
+
+    n = len(pats)
+    print(common.csv_row("session_oneshot", t_oneshot / n * 1e6,
+                         f"matches={sum(r.matches for r in base)}"))
+    print(common.csv_row("session_run", t_single / n * 1e6,
+                         f"compiles={compiles_after_single}"))
+    print(common.csv_row("session_run_batch", t_batch / n * 1e6,
+                         f"compiles={info['compiles']} hits={info['cache_hits']}"))
+    payload = dict(
+        n_patterns=n,
+        oneshot_s=t_oneshot,
+        session_run_s=t_single,
+        session_batch_s=t_batch,
+        compiles=info["compiles"],
+        cache_hits=info["cache_hits"],
+        matches=[r.matches for r in singles],
+        states=[r.states for r in singles],
+    )
+    common.save_json("session", payload)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--patterns", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    out = run(n_patterns=args.patterns, seed=args.seed)
+    print(f"\n{out['n_patterns']} same-bucket patterns: "
+          f"{out['compiles']} engine compilations, "
+          f"{out['cache_hits']} cache hits; "
+          f"one-shot {out['oneshot_s']:.2f}s -> session run "
+          f"{out['session_run_s']:.2f}s -> batch {out['session_batch_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,12 +22,13 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import EngineConfig, Graph, PackedGraph, build_plan
-from repro.core import engine as eng
+from repro.core import EngineConfig, SubgraphIndex
+from repro.core.session import shared_enumerator
+
 from repro.data import graphgen
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
@@ -54,27 +55,23 @@ def run_instance(
     key = id(inst.target)
     packed_cache = packed_cache if packed_cache is not None else {}
     if key not in packed_cache:
-        packed_cache[key] = PackedGraph.from_graph(inst.target)
-    packed = packed_cache[key]
-    # pad position/parent dims to buckets so the jitted engine is reused
-    # across patterns against the same target (same W)
-    p_pad = max(16, ((inst.pattern.n + 15) // 16) * 16)
-    plan = build_plan(
-        inst.pattern, packed, variant=variant, p_pad=p_pad, max_parents=8
-    )
-    if not plan.satisfiable:
+        packed_cache[key] = SubgraphIndex.build(inst.target)
+    index = packed_cache[key]
+    session = shared_enumerator(cfg)
+    query = session.prepare(inst.pattern, variant=variant, name=inst.name, index=index)
+    if not query.satisfiable:
         return InstanceRun(inst.name, 0, 0, 0, 0, 0.0, np.zeros(cfg.n_workers))
     t0 = time.perf_counter()
-    res = eng.run(plan, cfg)
+    ms = session.run(query)
     wall = time.perf_counter() - t0
     return InstanceRun(
         name=inst.name,
-        matches=res.matches,
-        states=res.states,
-        steps=res.steps,
-        steals=res.steals,
+        matches=ms.matches,
+        states=ms.states,
+        steps=ms.steps,
+        steals=ms.steals,
         wall_s=wall,
-        per_worker_states=res.per_worker_states,
+        per_worker_states=ms.per_worker_states,
     )
 
 

@@ -1,0 +1,32 @@
+"""``repro.bench`` — import shim for the repo-root ``benchmarks/`` package.
+
+The benchmark scripts live next to the repo root (not under ``src/``) so
+they can write ``artifacts/``; historically every consumer did its own
+``sys.path.insert(0, ".")`` which only worked when the cwd happened to be
+the repo root.  Importing this module instead locates the repo root from
+the installed package path and makes ``benchmarks`` importable::
+
+    import repro.bench                      # side effect: root on sys.path
+    from benchmarks import common           # now resolves anywhere
+
+or, equivalently::
+
+    from repro.bench import benchmarks_root
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# src/repro/bench/__init__.py -> repo root is three levels up from here.
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def benchmarks_root() -> str:
+    """Absolute path of the repo-root ``benchmarks/`` directory."""
+    return os.path.join(_ROOT, "benchmarks")
+
+
+if os.path.isdir(benchmarks_root()) and _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)

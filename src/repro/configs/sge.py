@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.configs.registry import Arch, Cell, CellBuild, round_up
-from repro.core import EngineConfig, Graph, enumerate_subgraphs
+from repro.core import EngineConfig, Enumerator, Graph, SubgraphIndex
 from repro.core import engine as eng
 from repro.core.ref import brute_force_count, ref_enumerate
 from repro.data import graphgen
@@ -84,19 +84,29 @@ def build_round(n_t: int, cfg: EngineConfig = ENGINE) -> CellBuild:
 
 
 def smoke() -> Dict[str, float]:
-    """End-to-end enumeration on a generated PPI-like instance, verified
-    against both oracles."""
+    """End-to-end enumeration on a generated PPI-like instance through the
+    session API, verified against the sequential oracle — and the session's
+    compile cache must actually hit on a second same-bucket query."""
     tgt = graphgen.random_graph(48, 160, n_labels=4, seed=3)
-    pat = graphgen.extract_pattern(tgt, 5, seed=4)
-    res = enumerate_subgraphs(
-        pat, tgt, variant="ri-ds-si-fc", n_workers=4, expand_width=4
+    session = Enumerator(
+        SubgraphIndex.build(tgt), config=EngineConfig(n_workers=4, expand_width=4)
     )
+    pat = graphgen.extract_pattern(tgt, 5, seed=4)
+    res = session.run(session.prepare(pat, name="smoke0"))
     ref = ref_enumerate(pat, tgt, variant="ri-ds-si-fc")
     assert res.matches == ref.matches and res.states == ref.states, (
         res.matches, res.states, ref.matches, ref.states,
     )
     assert res.matches >= 1  # extracted patterns always occur
-    return {"matches": float(res.matches), "states": float(res.states)}
+    pat2 = graphgen.extract_pattern(tgt, 6, seed=5)
+    session.run(session.prepare(pat2, name="smoke1"))
+    info = session.cache_info()
+    assert info["compiles"] == 1 and info["cache_hits"] >= 1, info
+    return {
+        "matches": float(res.matches),
+        "states": float(res.states),
+        "engine_compiles": float(info["compiles"]),
+    }
 
 
 ARCH = registry.register(

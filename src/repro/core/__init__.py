@@ -8,22 +8,41 @@ Layers:
   engine     — frontier-vectorized work-stealing search (jax)
   scheduler  — steal-round policy (shared with the GNN batch balancer)
   ref        — sequential + brute-force oracles
-  api        — enumerate_subgraphs()
+  session    — prepared-query session API (SubgraphIndex / Query /
+               Enumerator / MatchSet, shape-bucketed compile cache)
+  api        — enumerate_subgraphs() one-shot compatibility wrapper
+  multi      — deprecated batch wrapper (enumerate_many) over the session
 """
 
 from repro.core.api import EnumerationResult, enumerate_subgraphs
 from repro.core.engine import EngineConfig, EngineResult
 from repro.core.graph import Graph, PackedGraph
 from repro.core.plan import SearchPlan, VARIANTS, build_plan
+from repro.core.session import (
+    Enumerator,
+    MatchSet,
+    Query,
+    SHAPE_BUCKETS,
+    SubgraphIndex,
+    prepare_query,
+    snap_p_pad,
+)
 
 __all__ = [
     "EnumerationResult",
     "enumerate_subgraphs",
     "EngineConfig",
     "EngineResult",
+    "Enumerator",
     "Graph",
+    "MatchSet",
     "PackedGraph",
+    "Query",
+    "SHAPE_BUCKETS",
     "SearchPlan",
+    "SubgraphIndex",
     "VARIANTS",
     "build_plan",
+    "prepare_query",
+    "snap_p_pad",
 ]

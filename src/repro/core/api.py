@@ -1,9 +1,18 @@
-"""Public API for the subgraph-enumeration core.
+"""Public one-shot API for the subgraph-enumeration core.
 
     from repro.core import enumerate_subgraphs
     res = enumerate_subgraphs(pattern, target, variant="ri-ds-si-fc",
                               n_workers=16)
     print(res.matches, res.states)
+
+This is a compatibility wrapper over the prepared-query session API
+(`repro.core.session`): each call builds a throwaway
+:class:`~repro.core.session.SubgraphIndex` and runs one
+:class:`~repro.core.session.Query` through a process-wide
+:class:`~repro.core.session.Enumerator` keyed by the engine config, so
+repeated calls with the same config reuse the same shape-bucketed jitted
+engines.  For multi-query workloads, use the session API directly — it
+amortizes the target packing as well.
 """
 
 from __future__ import annotations
@@ -12,10 +21,10 @@ import dataclasses
 import time
 from typing import Optional, Union
 
-from repro.core import engine as engine_mod
 from repro.core.engine import EngineConfig, EngineResult
 from repro.core.graph import Graph, PackedGraph
-from repro.core.plan import SearchPlan, build_plan
+from repro.core.plan import SearchPlan
+from repro.core.session import SubgraphIndex, shared_enumerator
 
 
 @dataclasses.dataclass
@@ -59,39 +68,21 @@ def enumerate_subgraphs(
         cfg = dataclasses.replace(config, **config_kwargs)
 
     t0 = time.perf_counter()
-    packed = target if isinstance(target, PackedGraph) else PackedGraph.from_graph(target)
-    plan = build_plan(pattern, packed, variant=variant)
+    index = SubgraphIndex.build(target)
+    session = shared_enumerator(cfg)
+    query = session.prepare(pattern, variant=variant, index=index)
     t1 = time.perf_counter()
 
-    if not plan.satisfiable:
-        empty = EngineResult(
-            matches=0, states=0, steps=0, steals=0, steal_rounds=0,
-            mean_steal_depth=0.0, mean_expand_depth=0.0,
-            per_worker_states=None,
-            per_worker_matches=None, overflow=False, match_buf=None,
-        )
-        return EnumerationResult(
-            matches=0, states=0, steps=0, steals=0, steal_rounds=0,
-            mean_steal_depth=0.0, preprocess_s=t1 - t0, match_s=0.0,
-            engine=empty, plan=plan,
-        )
-
-    res = engine_mod.run(plan, cfg)
-    t2 = time.perf_counter()
-    if res.overflow:
-        raise RuntimeError(
-            "engine stack overflow — increase EngineConfig.stack_cap "
-            f"(current auto={cfg.resolved_stack_cap(plan.p_pad)})"
-        )
+    ms = session.run(query)
     return EnumerationResult(
-        matches=res.matches,
-        states=res.states,
-        steps=res.steps,
-        steals=res.steals,
-        steal_rounds=res.steal_rounds,
-        mean_steal_depth=res.mean_steal_depth,
+        matches=ms.matches,
+        states=ms.states,
+        steps=ms.steps,
+        steals=ms.steals,
+        steal_rounds=ms.steal_rounds,
+        mean_steal_depth=ms.mean_steal_depth,
         preprocess_s=t1 - t0,
-        match_s=t2 - t1,
-        engine=res,
-        plan=plan,
+        match_s=ms.match_s,
+        engine=ms.engine,
+        plan=ms.plan,
     )

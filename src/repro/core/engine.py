@@ -578,6 +578,14 @@ def run(plan: SearchPlan, cfg: EngineConfig) -> EngineResult:
     arrays = make_plan_arrays(plan)
     state = init_state(plan, cfg)
     final = jax.block_until_ready(_run_jit(cfg, arrays, state))
+    return result_from_state(final, cfg)
+
+
+def result_from_state(final: EngineState, cfg: EngineConfig) -> EngineResult:
+    """Reduce a drained (unbatched) :class:`EngineState` to an
+    :class:`EngineResult` — shared by the one-shot :func:`run` and the
+    session executor (`repro.core.session`), whose batch path reduces one
+    vmapped lane at a time."""
     steals = int(jnp.sum(final.steals))
     sdepth = int(jnp.sum(final.steal_depth))
     states = int(jnp.sum(final.states))

@@ -1,15 +1,19 @@
-"""Multi-query enumeration: a batch of pattern queries against one target.
+"""Deprecated multi-query driver — now a shim over `repro.core.session`.
 
-The paper's workloads are collections of *thousands* of patterns per target
-(PPIS32: 420, PDBSv1: 1760).  This driver packs queries with padded-common
-plan shapes and runs the engine **vmapped over the query axis** — on the
-production mesh that axis maps to ``pod`` (DESIGN.md §5), so independent
-queries occupy independent pods while each query still uses its pod's
-worker/tensor parallelism.
+The LPT pack balancing, plan stacking and vmapped engine execution that
+lived here migrated into :class:`repro.core.session.Enumerator`
+(``run_batch`` / ``stream``), which adds shape-bucketed compile caching on
+top.  New code should use the session API::
 
-The vmapped ``while_loop`` runs until *all* queries in a pack drain; packs
-are therefore built by LPT-balancing predicted work (`balance_assignment` —
-the paper's scheduling insight applied one level up).
+    from repro.core.session import Enumerator, SubgraphIndex
+    enum = Enumerator(SubgraphIndex.build(target), config=cfg)
+    results = enum.run_batch([enum.prepare(p) for p in patterns])
+
+:func:`enumerate_many` is kept with its original signature and now returns
+**exactly one result per input pattern, in input order** (the old
+implementation silently dropped unprocessed queries and lost name
+alignment).  :func:`run_batch` over raw plans is kept for callers that
+stack their own same-shaped plans.
 """
 
 from __future__ import annotations
@@ -19,13 +23,12 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import engine as eng
 from repro.core.engine import EngineConfig
-from repro.core.graph import Graph, PackedGraph, popcount
-from repro.core.plan import SearchPlan, build_plan
-from repro.core.scheduler import balance_assignment
+from repro.core.graph import Graph
+from repro.core.plan import SearchPlan
+from repro.core.session import Enumerator, SubgraphIndex
 
 
 @dataclasses.dataclass
@@ -42,7 +45,10 @@ def _stack_plans(plans: Sequence[SearchPlan]) -> eng.PlanArrays:
 
 
 def run_batch(plans: Sequence[SearchPlan], cfg: EngineConfig):
-    """Run a pack of same-shaped plans; returns stacked final EngineStates."""
+    """Run a pack of same-shaped plans; returns stacked final EngineStates.
+
+    Deprecated: prefer :meth:`Enumerator.run_batch`, which adds LPT
+    balancing, bucket grouping and compile caching."""
     stacked = _stack_plans(plans)
     states = jax.tree.map(
         lambda *xs: jnp.stack(xs), *[eng.init_state(p, cfg) for p in plans]
@@ -63,45 +69,20 @@ def enumerate_many(
     pack_size: int = 4,
     names: Optional[Sequence[str]] = None,
 ) -> List[QueryResult]:
-    """Enumerate every pattern against ``target`` in LPT-balanced packs."""
+    """Enumerate every pattern against ``target`` in LPT-balanced packs.
+
+    Compatibility wrapper over :meth:`Enumerator.run_batch`; returns one
+    :class:`QueryResult` per pattern, aligned with the input order."""
     cfg = cfg or EngineConfig(n_workers=8, expand_width=4)
-    packed = PackedGraph.from_graph(target)
-    p_pad = max(16, max((((p.n + 15) // 16) * 16) for p in patterns))
-    mp = 8
-    plans = [
-        build_plan(p, packed, variant=variant, p_pad=p_pad, max_parents=mp)
-        for p in patterns
-    ]
     names = list(names or [f"q{i}" for i in range(len(patterns))])
-
-    # predicted work ~ product of the first few domain sizes (cheap proxy)
-    def predict(plan: SearchPlan) -> float:
-        sizes = popcount(plan.dom_bits[: min(plan.n_p, 4)])
-        return float(np.prod(np.maximum(sizes, 1), dtype=np.float64))
-
-    n_packs = max(1, (len(plans) + pack_size - 1) // pack_size)
-    assignment = balance_assignment([predict(p) for p in plans], n_packs)
-
-    out: List[Optional[QueryResult]] = [None] * len(plans)
-    for pack_id in range(n_packs):
-        idx = [i for i, a in enumerate(assignment) if a == pack_id]
-        if not idx:
-            continue
-        runnable = [i for i in idx if plans[i].satisfiable]
-        for i in idx:
-            if not plans[i].satisfiable:
-                out[i] = QueryResult(names[i], 0, 0, 0)
-        if not runnable:
-            continue
-        finals = run_batch([plans[i] for i in runnable], cfg)
-        for row, i in enumerate(runnable):
-            one = jax.tree.map(lambda x: x[row], finals)
-            if bool(one.overflow):
-                raise RuntimeError(f"stack overflow in query {names[i]}")
-            out[i] = QueryResult(
-                name=names[i],
-                matches=int(jnp.sum(one.matches)),
-                states=int(jnp.sum(one.states)),
-                steps=int(one.steps),
-            )
-    return [r for r in out if r is not None]
+    if len(names) != len(patterns):
+        raise ValueError(
+            f"names has {len(names)} entries for {len(patterns)} patterns"
+        )
+    session = Enumerator(SubgraphIndex.build(target), config=cfg, variant=variant)
+    queries = [session.prepare(p, name=n) for p, n in zip(patterns, names)]
+    results = session.run_batch(queries, pack_size=pack_size)
+    return [
+        QueryResult(name=ms.name, matches=ms.matches, states=ms.states, steps=ms.steps)
+        for ms in results
+    ]

@@ -1,0 +1,499 @@
+"""Prepared-query session API for subgraph enumeration.
+
+The paper's workloads are collections of *thousands* of patterns per target
+(PPIS32: 420, PDBSv1: 1760 queries).  The one-shot
+:func:`repro.core.api.enumerate_subgraphs` re-packs the target, rebuilds the
+plan and re-traces the engine on every call; this module is the
+session-oriented surface that amortizes all three:
+
+* :class:`SubgraphIndex` — a prepared target: the :class:`PackedGraph`
+  bitmaps plus label/degree metadata, built once, reusable across queries
+  and picklable (pure numpy — ship it to another process, load it in a
+  server).
+* :class:`Query` — a pattern compiled against an index into a
+  :class:`SearchPlan` whose padding is snapped to **shape buckets**
+  (``p_pad ∈ {16, 32, 64, 128}``, fixed ``max_parents``), so thousands of
+  patterns lower to a handful of XLA compilations.
+* :class:`Enumerator` — the session object: an :class:`EngineConfig`, a
+  keyed compile cache ``(kind, p_pad, max_parents, n_t, w, …) → jitted
+  engine`` with ``compiles`` / ``cache_hits`` counters, and three execution
+  methods sharing one code path:
+
+    - ``run(query)``                 — one query, one engine invocation;
+    - ``run_batch(queries)``         — LPT-balanced vmapped packs (the
+      former ``core/multi.py`` driver), exactly one result per query, in
+      input order;
+    - ``stream(queries)``            — generator yielding a
+      :class:`MatchSet` per query as packs drain (the serving path).
+
+Results unify into :class:`MatchSet`: counts, per-worker statistics, and
+lazy match materialization (``mappings()`` re-runs the prepared query with
+a match buffer only when asked).
+
+Typical use::
+
+    index = SubgraphIndex.build(target)             # once per target
+    enum = Enumerator(index, n_workers=16)          # once per session
+    q = enum.prepare(pattern)                       # per pattern (cheap)
+    ms = enum.run(q)                                # engine reused
+    for ms in enum.stream([enum.prepare(p) for p in patterns]):
+        print(ms.name, ms.matches)
+    enum.cache_info()   # {'compiles': 1, 'cache_hits': 419, ...}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.engine import EngineConfig, EngineResult
+from repro.core.graph import Graph, PackedGraph, popcount
+from repro.core.plan import SearchPlan, build_plan
+from repro.core.scheduler import balance_assignment
+
+# Padded pattern-position buckets: every plan's ``p_pad`` snaps up to one of
+# these, so patterns of size 3..16 share one engine compilation, 17..32 the
+# next, and so on.  Beyond the last bucket we round up to multiples of it.
+SHAPE_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
+
+# Fixed parent-slot padding for bucketed plans (the ordering expands it when
+# a dense pattern genuinely needs more; that pattern then lands in its own —
+# rare — bucket).
+DEFAULT_MAX_PARENTS = 8
+
+# Cap on the lazily materialized match buffer (per worker).
+_MATERIALIZE_CAP = 1 << 17
+
+
+def snap_p_pad(n_p: int) -> int:
+    """Smallest shape bucket that holds ``n_p`` pattern positions."""
+    for b in SHAPE_BUCKETS:
+        if n_p <= b:
+            return b
+    top = SHAPE_BUCKETS[-1]
+    return ((n_p + top - 1) // top) * top
+
+
+# ---------------------------------------------------------------------------
+# SubgraphIndex — a prepared target
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SubgraphIndex:
+    """A target graph prepared for repeated querying.
+
+    Holds the packed adjacency bitmaps plus the label/degree metadata the
+    preprocessing (domains, ordering) consults.  Pure numpy — picklable and
+    shareable across processes; build once per target, reuse for every
+    pattern.
+    """
+
+    packed: PackedGraph
+    n_labels: int
+    label_counts: np.ndarray  # [n_labels] int64
+    max_degree: int
+    build_s: float
+
+    @staticmethod
+    def build(target: Union[Graph, PackedGraph, "SubgraphIndex"]) -> "SubgraphIndex":
+        if isinstance(target, SubgraphIndex):
+            return target
+        t0 = time.perf_counter()
+        packed = target if isinstance(target, PackedGraph) else PackedGraph.from_graph(target)
+        n_labels = int(packed.labels.max()) + 1 if packed.n else 0
+        counts = np.bincount(packed.labels, minlength=max(n_labels, 1)).astype(np.int64)
+        degs = packed.deg_out + packed.deg_in
+        max_deg = int(degs.max()) if packed.n else 0
+        return SubgraphIndex(
+            packed=packed,
+            n_labels=n_labels,
+            label_counts=counts,
+            max_degree=max_deg,
+            build_s=time.perf_counter() - t0,
+        )
+
+    @property
+    def n(self) -> int:
+        return self.packed.n
+
+    @property
+    def w(self) -> int:
+        return self.packed.w
+
+    @property
+    def n_edge_labels(self) -> int:
+        return self.packed.n_edge_labels
+
+
+# ---------------------------------------------------------------------------
+# Query — a pattern compiled against an index
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Query:
+    """A pattern prepared against a :class:`SubgraphIndex`.
+
+    ``plan`` is padded to a shape bucket so that same-bucket queries share
+    one jitted engine inside an :class:`Enumerator`.
+    """
+
+    pattern: Graph
+    plan: SearchPlan
+    variant: str
+    name: str
+    prepare_s: float
+
+    @property
+    def bucket(self) -> Tuple[int, int, int, int, int]:
+        """The compile-cache shape key: (p_pad, max_parents, n_t, w, n_elab)."""
+        p = self.plan
+        return (p.p_pad, p.max_parents, p.n_t, p.w, p.n_edge_labels)
+
+    @property
+    def satisfiable(self) -> bool:
+        return self.plan.satisfiable
+
+
+def prepare_query(
+    pattern: Graph,
+    index: Union[SubgraphIndex, Graph, PackedGraph],
+    variant: str = "ri-ds-si-fc",
+    name: Optional[str] = None,
+    p_pad: Optional[int] = None,
+    max_parents: Optional[int] = None,
+) -> Query:
+    """Compile ``pattern`` against ``index`` into a bucketed :class:`Query`."""
+    index = SubgraphIndex.build(index)
+    t0 = time.perf_counter()
+    plan = build_plan(
+        pattern,
+        index.packed,
+        variant=variant,
+        p_pad=p_pad if p_pad is not None else snap_p_pad(pattern.n),
+        max_parents=max_parents if max_parents is not None else DEFAULT_MAX_PARENTS,
+    )
+    return Query(
+        pattern=pattern,
+        plan=plan,
+        variant=variant,
+        name=name or f"q{pattern.n}n{pattern.m}m",
+        prepare_s=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MatchSet — the unified result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MatchSet:
+    """Result of enumerating one query: counts, per-worker stats, lazy matches."""
+
+    name: str
+    query_index: int
+    matches: int
+    states: int
+    steps: int
+    steals: int
+    steal_rounds: int
+    mean_steal_depth: float
+    mean_expand_depth: float
+    per_worker_states: Optional[np.ndarray]
+    per_worker_matches: Optional[np.ndarray]
+    preprocess_s: float
+    match_s: float
+    plan: SearchPlan
+    engine: EngineResult
+    _match_buf: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    _materialize: Optional[Callable[[], Optional[np.ndarray]]] = dataclasses.field(
+        default=None, repr=False
+    )
+    _mappings: Optional[List[Tuple[int, ...]]] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def total_s(self) -> float:
+        return self.preprocess_s + self.match_s
+
+    def mappings(self) -> List[Tuple[int, ...]]:
+        """Materialized match mappings (order position -> target node).
+
+        Lazy: if the engine ran in counting mode (the benchmarked mode), the
+        prepared query is re-run once with a match buffer sized to hold every
+        match; the result is cached on the MatchSet.
+        """
+        if self._mappings is not None:
+            return self._mappings
+        if self.matches == 0:
+            self._mappings = []
+            return self._mappings
+        if self.matches > _MATERIALIZE_CAP and self._match_buf is None:
+            raise RuntimeError(
+                f"{self.matches} matches exceed the materialization cap "
+                f"({_MATERIALIZE_CAP}); re-run with an explicit "
+                "collect_matches budget and consume engine.match_buf directly"
+            )
+        buf = self._match_buf
+        if buf is None and self._materialize is not None:
+            buf = self._materialize()
+        out: List[Tuple[int, ...]] = []
+        if buf is not None:
+            n_p = self.plan.n_p
+            rows = buf.reshape(-1, buf.shape[-1])[:, :n_p]
+            valid = (rows >= 0).all(axis=1)
+            out = [tuple(int(x) for x in r) for r in rows[valid]]
+        self._mappings = out
+        return out
+
+
+def _empty_engine_result() -> EngineResult:
+    return EngineResult(
+        matches=0, states=0, steps=0, steals=0, steal_rounds=0,
+        mean_steal_depth=0.0, mean_expand_depth=0.0,
+        per_worker_states=None, per_worker_matches=None,
+        overflow=False, match_buf=None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Enumerator — the session
+# ---------------------------------------------------------------------------
+
+class Enumerator:
+    """A subgraph-enumeration session with a shape-bucketed compile cache.
+
+    Holds an :class:`EngineConfig` and a dict of jitted engines keyed by
+    ``(cfg, kind, pack, bucket)``.  All three execution methods go through
+    the same cache, so any mix of ``run`` / ``run_batch`` / ``stream`` over
+    same-bucket queries costs at most one compilation per (kind, pack
+    width).  ``compiles`` and ``cache_hits`` counters let benchmarks prove
+    recompilation is gone.
+    """
+
+    def __init__(
+        self,
+        index: Union[SubgraphIndex, Graph, PackedGraph, None] = None,
+        config: Optional[EngineConfig] = None,
+        variant: str = "ri-ds-si-fc",
+        **config_kwargs,
+    ):
+        cfg = config or EngineConfig(**config_kwargs)
+        if config is not None and config_kwargs:
+            cfg = dataclasses.replace(config, **config_kwargs)
+        self.config = cfg
+        self.variant = variant
+        self.index = SubgraphIndex.build(index) if index is not None else None
+        self._engines: Dict[tuple, Callable] = {}
+        self.compiles = 0
+        self.cache_hits = 0
+
+    # -- cache -------------------------------------------------------------
+
+    def cache_info(self) -> Dict[str, int]:
+        return {
+            "compiles": self.compiles,
+            "cache_hits": self.cache_hits,
+            "entries": len(self._engines),
+        }
+
+    def _engine_fn(self, cfg: EngineConfig, kind: str, pack: int, query: Query) -> Callable:
+        key = (cfg, kind, pack) + query.bucket
+        fn = self._engines.get(key)
+        if fn is not None:
+            self.cache_hits += 1
+            return fn
+        self.compiles += 1
+        if kind == "single":
+            fn = jax.jit(functools.partial(eng._engine_loop, cfg))
+        else:
+            fn = jax.jit(jax.vmap(functools.partial(eng._engine_loop, cfg)))
+        self._engines[key] = fn
+        return fn
+
+    # -- preparation -------------------------------------------------------
+
+    def prepare(
+        self,
+        pattern: Graph,
+        variant: Optional[str] = None,
+        name: Optional[str] = None,
+        index: Union[SubgraphIndex, Graph, PackedGraph, None] = None,
+    ) -> Query:
+        """Compile a pattern into a bucketed :class:`Query` for this session."""
+        idx = index if index is not None else self.index
+        if idx is None:
+            raise ValueError(
+                "Enumerator has no default SubgraphIndex; pass index= to "
+                "prepare() or construct Enumerator(index, ...)"
+            )
+        return prepare_query(pattern, idx, variant=variant or self.variant, name=name)
+
+    def _coerce(self, q: Union[Query, Graph]) -> Query:
+        return q if isinstance(q, Query) else self.prepare(q)
+
+    # -- execution: single -------------------------------------------------
+
+    def run(self, query: Union[Query, Graph], collect_matches: int = 0) -> MatchSet:
+        """Run one prepared query through the (cached) engine."""
+        query = self._coerce(query)
+        if not query.plan.satisfiable:
+            return self._matchset(query, -1, _empty_engine_result(), 0.0)
+        cfg = self.config
+        if collect_matches:
+            cfg = dataclasses.replace(cfg, collect_matches=collect_matches)
+        t0 = time.perf_counter()
+        fn = self._engine_fn(cfg, "single", 1, query)
+        arrays = eng.make_plan_arrays(query.plan)
+        state = eng.init_state(query.plan, cfg)
+        final = jax.block_until_ready(fn(arrays, state))
+        res = eng.result_from_state(final, cfg)
+        match_s = time.perf_counter() - t0
+        if res.overflow:
+            raise RuntimeError(
+                "engine stack overflow — increase EngineConfig.stack_cap "
+                f"(current auto={cfg.resolved_stack_cap(query.plan.p_pad)})"
+            )
+        return self._matchset(query, -1, res, match_s)
+
+    # -- execution: batch / stream ----------------------------------------
+
+    def stream(
+        self,
+        queries: Iterable[Union[Query, Graph]],
+        pack_size: int = 4,
+    ) -> Iterator[MatchSet]:
+        """Yield one :class:`MatchSet` per query as vmapped packs drain.
+
+        Queries are grouped by shape bucket, LPT-balanced into packs of
+        ``pack_size`` (padded with inert lanes so every pack shares one
+        compilation), and executed pack by pack; each completed pack yields
+        its per-query results immediately.  ``MatchSet.query_index`` carries
+        the position in the input sequence.
+        """
+        qs: List[Query] = [self._coerce(q) for q in queries]
+        cfg = self.config
+
+        groups: Dict[tuple, List[int]] = {}
+        for i, q in enumerate(qs):
+            if not q.plan.satisfiable:
+                yield self._matchset(q, i, _empty_engine_result(), 0.0)
+            else:
+                groups.setdefault(q.bucket, []).append(i)
+
+        for idxs in groups.values():
+            weights = [_predict_work(qs[i].plan) for i in idxs]
+            n_packs = max(1, (len(idxs) + pack_size - 1) // pack_size)
+            assignment = balance_assignment(weights, n_packs)
+            for pack_id in range(n_packs):
+                members = [i for i, a in zip(idxs, assignment) if a == pack_id]
+                # LPT balances weight, not count: an overloaded pack is split
+                # into pack_size chunks so every engine call has the same lane
+                # width (one compilation per bucket, counters stay honest).
+                for j in range(0, len(members), pack_size):
+                    yield from self._run_pack(members[j:j + pack_size], qs, cfg, pack_size)
+
+    def run_batch(
+        self,
+        queries: Sequence[Union[Query, Graph]],
+        pack_size: int = 4,
+    ) -> List[MatchSet]:
+        """Run a batch of queries; exactly one result per query, in order."""
+        queries = list(queries)
+        out: List[Optional[MatchSet]] = [None] * len(queries)
+        for ms in self.stream(queries, pack_size=pack_size):
+            out[ms.query_index] = ms
+        assert all(r is not None for r in out), "stream dropped a query"
+        return out  # type: ignore[return-value]
+
+    def _run_pack(
+        self, members: List[int], qs: List[Query], cfg: EngineConfig, pack_size: int
+    ) -> Iterator[MatchSet]:
+        """Execute one padded pack of same-bucket queries, yielding results."""
+        t0 = time.perf_counter()
+        plans = [qs[i].plan for i in members]
+        fn = self._engine_fn(cfg, "batch", pack_size, qs[members[0]])
+        arrays = [eng.make_plan_arrays(p) for p in plans]
+        states = [eng.init_state(p, cfg) for p in plans]
+        # pad inert lanes so every pack of this bucket shares one compilation
+        # (size==0 lanes freeze immediately under the vmapped while_loop)
+        while len(arrays) < pack_size:
+            arrays.append(arrays[0])
+            states.append(_inert_state(states[0]))
+        stacked_plan = jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
+        stacked_state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        final = jax.block_until_ready(fn(stacked_plan, stacked_state))
+        match_s = (time.perf_counter() - t0) / max(len(members), 1)
+        for row, i in enumerate(members):
+            lane = jax.tree.map(lambda x, r=row: x[r], final)
+            res = eng.result_from_state(lane, cfg)
+            if res.overflow:
+                raise RuntimeError(f"stack overflow in query {qs[i].name}")
+            yield self._matchset(qs[i], i, res, match_s)
+
+    # -- result assembly ---------------------------------------------------
+
+    def _matchset(self, query: Query, idx: int, res: EngineResult, match_s: float) -> MatchSet:
+        materialize = None
+        if res.match_buf is None and query.plan.satisfiable:
+            def materialize(q: Query = query, m: int = res.matches):
+                # round the buffer up to a power of two so re-materializations
+                # of different queries share a handful of engine configs
+                cap = min(1 << max(m - 1, 1).bit_length(), _MATERIALIZE_CAP)
+                return self.run(q, collect_matches=cap).engine.match_buf
+
+        return MatchSet(
+            name=query.name,
+            query_index=idx,
+            matches=res.matches,
+            states=res.states,
+            steps=res.steps,
+            steals=res.steals,
+            steal_rounds=res.steal_rounds,
+            mean_steal_depth=res.mean_steal_depth,
+            mean_expand_depth=res.mean_expand_depth,
+            per_worker_states=res.per_worker_states,
+            per_worker_matches=res.per_worker_matches,
+            preprocess_s=query.prepare_s,
+            match_s=match_s,
+            plan=query.plan,
+            engine=res,
+            _match_buf=res.match_buf,
+            _materialize=materialize,
+        )
+
+
+# Process-wide sessions for the compatibility wrappers and benchmark
+# harness: one Enumerator (and thus one engine-compile cache) per config.
+_SHARED: Dict[EngineConfig, Enumerator] = {}
+
+
+def shared_enumerator(cfg: EngineConfig) -> Enumerator:
+    """The process-wide session for ``cfg`` (created on first use)."""
+    s = _SHARED.get(cfg)
+    if s is None:
+        s = _SHARED[cfg] = Enumerator(config=cfg)
+    return s
+
+
+def _predict_work(plan: SearchPlan) -> float:
+    """Cheap work proxy: product of the first few domain sizes (the former
+    ``core/multi.py`` heuristic feeding LPT pack balancing)."""
+    sizes = popcount(plan.dom_bits[: min(plan.n_p, 4)])
+    return float(np.prod(np.maximum(sizes, 1), dtype=np.float64))
+
+
+def _inert_state(template: eng.EngineState) -> eng.EngineState:
+    """A copy of ``template`` with no work: size 0, empty candidate bitmaps.
+
+    Used to pad packs to a fixed lane count; the vmapped while_loop freezes
+    these lanes immediately, so they cost nothing but shape stability."""
+    return template._replace(
+        size=jnp.zeros_like(template.size),
+        st_cand=jnp.zeros_like(template.st_cand),
+    )

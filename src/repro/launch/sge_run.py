@@ -3,10 +3,21 @@
   PYTHONPATH=src python -m repro.launch.sge_run --collection ppis32-like \
       --variant ri-ds-si-fc --workers 16 --scale 0.3
 
-Generates (or loads) a collection, runs every (target, pattern) instance
-through the parallel engine, and reports per-instance matches / states /
-steps plus collection aggregates — the shape of the paper's experiment
-tables.
+Generates (or loads) a collection, prepares one
+:class:`~repro.core.session.SubgraphIndex` per target, and runs every
+pattern through a single :class:`~repro.core.session.Enumerator` session —
+so all instances share a handful of shape-bucketed engine compilations.
+Three execution modes map to the session's three methods:
+
+  * ``--mode single``   one engine invocation per query (default);
+  * ``--mode packed``   LPT-balanced vmapped packs (``run_batch``; on the
+    production mesh the pack axis maps to ``pod``);
+  * ``--mode stream``   results printed as packs drain (``stream``; the
+    serving path).
+
+Reports per-instance matches / states / steps plus collection aggregates —
+the shape of the paper's experiment tables — and the session's compile
+cache counters.
 """
 
 from __future__ import annotations
@@ -15,17 +26,11 @@ import argparse
 import sys
 import time
 
-import numpy as np
-
-from repro.core import EngineConfig
+from repro.core import EngineConfig, Enumerator, SubgraphIndex
 from repro.data import graphgen
-
-sys.path.insert(0, ".")
 
 
 def main() -> int:
-    from benchmarks import common  # reuse the corpus runner
-
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--collection", default="ppis32-like",
                     choices=sorted(graphgen.COLLECTIONS))
@@ -34,58 +39,58 @@ def main() -> int:
     ap.add_argument("--expand", type=int, default=4)
     ap.add_argument("--scale", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--mode", choices=("single", "packed", "stream"),
+                    default="single")
     ap.add_argument("--packed", action="store_true",
-                    help="run LPT-balanced multi-query packs (core/multi.py; "
-                    "the pod-axis execution mode) instead of one query at a time")
+                    help="deprecated alias for --mode packed")
     ap.add_argument("--pack-size", type=int, default=4)
     args = ap.parse_args()
+    mode = "packed" if args.packed else args.mode
 
     instances = graphgen.make_collection(
         args.collection, pattern_edges=(8, 16, 24), patterns_per_target=2,
         scale=args.scale, seed=args.seed,
     )
     cfg = EngineConfig(n_workers=args.workers, expand_width=args.expand)
+    session = Enumerator(config=cfg, variant=args.variant)
 
-    if args.packed:
-        from collections import defaultdict
-
-        from repro.core.multi import enumerate_many
-
-        by_target = defaultdict(list)
-        for inst in instances:
-            by_target[id(inst.target)].append(inst)
-        t0 = time.perf_counter()
-        matches = states = 0
-        for group in by_target.values():
-            results = enumerate_many(
-                [i.pattern for i in group], group[0].target,
-                variant=args.variant, cfg=cfg, pack_size=args.pack_size,
-                names=[i.name for i in group],
-            )
-            for r in results:
-                print(f"{r.name:40s} matches={r.matches:<8d} states={r.states:<9d} "
-                      f"steps={r.steps}")
-                matches += r.matches
-                states += r.states
-        total = time.perf_counter() - t0
-        print(f"\n[{args.collection}/packed] {len(instances)} queries, "
-              f"{matches} matches, {states} states, {total:.1f}s "
-              f"({states/max(total,1e-9):.0f} states/s)")
-        return 0
-    cache: dict = {}
+    indices: dict = {}
     t0 = time.perf_counter()
-    rows = []
+    queries = []
     for inst in instances:
-        r = common.run_instance(inst, variant=args.variant, cfg=cfg,
-                                packed_cache=cache)
-        rows.append(r)
-        print(f"{inst.name:40s} matches={r.matches:<8d} states={r.states:<9d} "
-              f"steps={r.steps:<7d} steals={r.steals:<5d} {r.wall_s:6.2f}s")
+        key = id(inst.target)
+        if key not in indices:
+            indices[key] = SubgraphIndex.build(inst.target)
+        queries.append(session.prepare(inst.pattern, name=inst.name,
+                                       index=indices[key]))
+
+    matches = states = 0
+    if mode == "single":
+        for q in queries:
+            ms = session.run(q)
+            print(f"{ms.name:40s} matches={ms.matches:<8d} states={ms.states:<9d} "
+                  f"steps={ms.steps:<7d} steals={ms.steals:<5d} {ms.match_s:6.2f}s")
+            matches += ms.matches
+            states += ms.states
+    elif mode == "packed":
+        for ms in session.run_batch(queries, pack_size=args.pack_size):
+            print(f"{ms.name:40s} matches={ms.matches:<8d} states={ms.states:<9d} "
+                  f"steps={ms.steps}")
+            matches += ms.matches
+            states += ms.states
+    else:  # stream: print in completion order, as the serving loop would
+        for ms in session.stream(queries, pack_size=args.pack_size):
+            print(f"{ms.name:40s} matches={ms.matches:<8d} states={ms.states:<9d} "
+                  f"steps={ms.steps}")
+            matches += ms.matches
+            states += ms.states
+
     total = time.perf_counter() - t0
-    states = sum(r.states for r in rows)
-    print(f"\n[{args.collection}] {len(rows)} instances, "
-          f"{sum(r.matches for r in rows)} matches, {states} states, "
-          f"{total:.1f}s total ({states/max(total,1e-9):.0f} states/s)")
+    info = session.cache_info()
+    print(f"\n[{args.collection}/{mode}] {len(queries)} queries, "
+          f"{matches} matches, {states} states, {total:.1f}s "
+          f"({states/max(total,1e-9):.0f} states/s); "
+          f"engine compiles={info['compiles']} cache_hits={info['cache_hits']}")
     return 0
 
 

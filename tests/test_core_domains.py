@@ -7,6 +7,7 @@ pattern position.  Verified against brute-force enumeration of all matches.
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import domains as dom_mod

@@ -6,6 +6,7 @@ all four algorithm variants, multiple worker/width configurations.
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EngineConfig, PackedGraph, enumerate_subgraphs

@@ -1,0 +1,135 @@
+"""Prepared-query session API: compile-cache behaviour, run/run_batch/stream
+agreement with the sequential oracle, and wrapper-vs-session equivalence."""
+
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    Enumerator,
+    SubgraphIndex,
+    enumerate_subgraphs,
+    snap_p_pad,
+)
+from repro.core.graph import Graph
+from repro.core.multi import enumerate_many
+from repro.core.ref import ref_enumerate
+from tests.conftest import extract_connected_pattern, random_graph
+
+CFG = EngineConfig(n_workers=4, expand_width=2)
+
+
+def _corpus(rng, n_pats=5):
+    tgt = random_graph(rng, 40, 120, n_labels=3)
+    pats = []
+    while len(pats) < n_pats:
+        p = extract_connected_pattern(rng, tgt, int(rng.integers(2, 5)))
+        if p.m > 0:
+            pats.append(p)
+    return tgt, pats
+
+
+def test_snap_p_pad_buckets():
+    assert snap_p_pad(1) == 16
+    assert snap_p_pad(16) == 16
+    assert snap_p_pad(17) == 32
+    assert snap_p_pad(33) == 64
+    assert snap_p_pad(128) == 128
+    assert snap_p_pad(129) == 256  # escape hatch beyond the last bucket
+
+
+def test_compile_cache_hits_same_bucket(rng):
+    """N same-bucket patterns through one session -> exactly one compile."""
+    tgt, pats = _corpus(rng, n_pats=6)
+    session = Enumerator(SubgraphIndex.build(tgt), config=CFG)
+    for i, p in enumerate(pats):
+        session.run(session.prepare(p, name=f"q{i}"))
+    info = session.cache_info()
+    assert info["compiles"] == 1, info
+    assert info["cache_hits"] == len(pats) - 1, info
+
+
+def test_run_matches_oracle(rng):
+    tgt, pats = _corpus(rng)
+    session = Enumerator(SubgraphIndex.build(tgt), config=CFG)
+    for p in pats:
+        ms = session.run(session.prepare(p))
+        ref = ref_enumerate(p, tgt, variant="ri-ds-si-fc")
+        assert (ms.matches, ms.states) == (ref.matches, ref.states)
+        assert ms.matches >= 1  # extracted patterns always occur
+
+
+def test_run_batch_and_stream_agree_with_run(rng):
+    tgt, pats = _corpus(rng, n_pats=7)
+    session = Enumerator(SubgraphIndex.build(tgt), config=CFG)
+    queries = [session.prepare(p, name=f"q{i}") for i, p in enumerate(pats)]
+    singles = [session.run(q) for q in queries]
+
+    batch = session.run_batch(queries, pack_size=3)
+    assert len(batch) == len(queries)
+    assert [ms.query_index for ms in batch] == list(range(len(queries)))
+    assert [ms.name for ms in batch] == [q.name for q in queries]
+    for s, b in zip(singles, batch):
+        assert (s.matches, s.states) == (b.matches, b.states)
+
+    streamed = {ms.query_index: ms for ms in session.stream(queries, pack_size=3)}
+    assert sorted(streamed) == list(range(len(queries)))
+    for i, s in enumerate(singles):
+        assert (streamed[i].matches, streamed[i].states) == (s.matches, s.states)
+
+
+def test_run_batch_keeps_unsatisfiable_aligned(rng):
+    """The old enumerate_many dropped queries; the session must return one
+    result per query, in order, including unsatisfiable ones."""
+    tgt, pats = _corpus(rng, n_pats=3)
+    # a pattern whose label does not exist in the target: unsatisfiable
+    bad = Graph.from_edges(2, [(0, 1)], labels=[99, 0], undirected=True)
+    mixed = [pats[0], bad, pats[1], bad, pats[2]]
+    session = Enumerator(SubgraphIndex.build(tgt), config=CFG)
+    results = session.run_batch([session.prepare(p, name=f"m{i}")
+                                 for i, p in enumerate(mixed)], pack_size=2)
+    assert len(results) == len(mixed)
+    assert [r.name for r in results] == [f"m{i}" for i in range(len(mixed))]
+    assert results[1].matches == results[3].matches == 0
+    assert results[0].matches >= 1
+
+    # ... and the compat wrapper inherits the fix with its old signature.
+    qrs = enumerate_many(mixed, tgt, cfg=CFG, pack_size=2,
+                         names=[f"m{i}" for i in range(len(mixed))])
+    assert [r.name for r in qrs] == [f"m{i}" for i in range(len(mixed))]
+    assert [r.matches for r in qrs] == [r.matches for r in results]
+
+
+@pytest.mark.parametrize("variant", ["ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc"])
+def test_wrapper_equals_session_all_variants(rng, variant):
+    tgt, pats = _corpus(rng, n_pats=2)
+    session = Enumerator(SubgraphIndex.build(tgt), config=CFG, variant=variant)
+    for p in pats:
+        ms = session.run(session.prepare(p))
+        res = enumerate_subgraphs(p, tgt, variant=variant, config=CFG)
+        assert (res.matches, res.states) == (ms.matches, ms.states)
+
+
+def test_matchset_lazy_mappings(rng):
+    tgt, pats = _corpus(rng, n_pats=1)
+    session = Enumerator(SubgraphIndex.build(tgt), config=CFG)
+    ms = session.run(session.prepare(pats[0]))
+    assert ms._match_buf is None  # counting mode: nothing materialized yet
+    maps = ms.mappings()
+    assert len(maps) == ms.matches
+    for m in maps:
+        assert len(set(m)) == len(m)  # injective
+    assert ms.mappings() is maps  # cached
+
+
+def test_index_picklable_and_reusable(rng):
+    tgt, pats = _corpus(rng, n_pats=1)
+    index = SubgraphIndex.build(tgt)
+    index2 = pickle.loads(pickle.dumps(index))
+    np.testing.assert_array_equal(index.packed.adj_bits, index2.packed.adj_bits)
+    a = Enumerator(index, config=CFG)
+    b = Enumerator(index2, config=CFG)
+    pa, pb = a.prepare(pats[0]), b.prepare(pats[0])
+    assert (a.run(pa).matches, a.run(pa).states) == (b.run(pb).matches, b.run(pb).states)
