@@ -1,0 +1,152 @@
+"""C8 — mesh-sharded scaling sweep (paper Fig. 3 analogue, DESIGN.md §2.4).
+
+Runs the ppis32-like synthetic collection through the engine's ``shard_map``
+path on a 1 / 2 / 4-device ``data`` mesh (CPU virtual devices: the module
+forces ``--xla_force_host_platform_device_count=4`` before jax initializes,
+so one process sweeps all three mesh sizes over subsets of the same device
+pool) and asserts the **matches invariant**: every mesh size must report
+exactly the same match and state counts as the single-device engine —
+sharding redistributes work, never results.
+
+Reported per sweep point (BSP methodology, benchmarks/common.py):
+
+  * total matches / states (must be constant across device counts);
+  * engine steps (the BSP makespan — constant here too, since the sharded
+    steal round is entry-for-entry identical to the single-device one;
+    device count changes *where* stacks live, not the global schedule);
+  * steal traffic per device: entries stolen **into** each device's
+    workers — under the all-gather protocol every stolen entry is part of
+    the cross-device traffic a real multi-chip run pays for.
+
+Run:
+
+    PYTHONPATH=src python benchmarks/bench_sharded.py [--scale 0.3]
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def _force_virtual_devices(n: int = 4) -> None:
+    # Device count is locked at first jax initialization; this must run
+    # before anything below imports jax.
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+_force_virtual_devices()
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+from typing import Dict, List  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.bench  # noqa: F401,E402  (repo root on sys.path)
+from benchmarks import common  # noqa: E402
+from repro.core import EngineConfig, Enumerator, SubgraphIndex  # noqa: E402
+from repro.data import graphgen  # noqa: E402
+
+DEVICE_SWEEP = (1, 2, 4)
+N_WORKERS = 8
+EXPAND = 4
+
+
+def run(scale: float = 0.3, seed: int = 7, collection: str = "ppis32-like") -> Dict:
+    instances = graphgen.make_collection(
+        collection, pattern_edges=(8, 16, 24), patterns_per_target=2,
+        scale=scale, seed=seed,
+    )
+    indices: dict = {}
+    for inst in instances:
+        indices.setdefault(id(inst.target), SubgraphIndex.build(inst.target))
+
+    avail = len(jax.devices())
+    sweep = [d for d in DEVICE_SWEEP if d <= avail]
+    assert len(sweep) >= 2, (
+        f"need >= 2 devices for the sweep, have {avail}; run this module as "
+        "a fresh process (it sets XLA_FLAGS itself) or set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4"
+    )
+
+    out: Dict[str, Dict] = {}
+    baseline: Dict[str, tuple] = {}
+    for n_dev in sweep:
+        cfg = EngineConfig(n_workers=N_WORKERS, expand_width=EXPAND)
+        session = Enumerator(config=cfg, mesh=None if n_dev == 1 else n_dev)
+        v = session.config.n_workers
+        v_per_dev = v // n_dev
+        matches = states = steps = steals = 0
+        pw_steals = np.zeros(v, dtype=np.int64)
+        t0 = time.perf_counter()
+        for inst in instances:
+            q = session.prepare(inst.pattern, name=inst.name,
+                                index=indices[id(inst.target)])
+            if not q.satisfiable:
+                continue
+            ms = session.run(q)
+            if n_dev == sweep[0]:
+                baseline[inst.name] = (ms.matches, ms.states)
+            else:
+                assert baseline[inst.name] == (ms.matches, ms.states), (
+                    f"{inst.name}: devices={n_dev} changed results "
+                    f"{(ms.matches, ms.states)} != {baseline[inst.name]}"
+                )
+            matches += ms.matches
+            states += ms.states
+            steps += ms.steps
+            steals += ms.steals
+            pw_steals += ms.per_worker_steals.astype(np.int64)
+        wall = time.perf_counter() - t0
+        per_dev = pw_steals.reshape(n_dev, v_per_dev).sum(axis=1)
+        out[f"d{n_dev}"] = dict(
+            devices=n_dev, workers=v, matches=matches, states=states,
+            steps=steps, steals=steals, wall_s=wall,
+            steals_into_device=per_dev.tolist(),
+            compiles=session.cache_info()["compiles"],
+        )
+
+    ref = out[f"d{sweep[0]}"]
+    for n_dev in sweep[1:]:
+        row = out[f"d{n_dev}"]
+        assert (row["matches"], row["states"]) == (ref["matches"], ref["states"])
+    out["_invariant"] = dict(
+        matches=ref["matches"], states=ref["states"],
+        device_counts=sweep, holds=True,
+    )
+    common.save_json("sharded", out)
+    return out
+
+
+def emit_csv(out: Dict) -> List[str]:
+    lines = []
+    for key, row in sorted(out.items()):
+        if key.startswith("_"):
+            continue
+        per_dev = ";".join(f"d{i}={s}" for i, s in enumerate(row["steals_into_device"]))
+        lines.append(common.csv_row(
+            f"sharded/{key}", row["wall_s"] * 1e6 / max(row["states"], 1),
+            f"matches={row['matches']};states={row['states']};"
+            f"steps={row['steps']};steals={row['steals']};{per_dev}",
+        ))
+    inv = out["_invariant"]
+    lines.append(common.csv_row(
+        "sharded/invariant", 0.0,
+        f"holds={inv['holds']};matches={inv['matches']};"
+        f"devices={'/'.join(str(d) for d in inv['device_counts'])}",
+    ))
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--collection", default="ppis32-like")
+    args = ap.parse_args()
+    print("\n".join(emit_csv(run(args.scale, args.seed, args.collection))))

@@ -9,10 +9,12 @@ expansion steps + one steal round) under the production mesh:
   * ``sge_graemlin32`` n_t =  6,726  (dense microbial)
   * ``sge_pdbsv1``     n_t = 33,067  (large sparse)
 
-Workers shard over ``('pod','data')`` (the paper's thread axis), packed
-bitmap words over ``'model'`` (tensor parallelism the paper did not have —
-DESIGN.md §2).  Bitmap words are padded to multiples of 128 so the tensor
-axis always divides.
+Workers shard over ``('pod','data')`` (the paper's thread axis) — the
+executable form of this is the engine's ``shard_map`` path
+(`repro.core.engine.run_sharded`, DESIGN.md §2.4); packed bitmap words
+shard over ``'model'`` (tensor parallelism the paper did not have —
+DESIGN.md §2.2).  Bitmap words are padded to multiples of 128 so the
+tensor axis always divides.
 
 MODEL_FLOPS: useful bitwise word-lane ops per round =
 ``R · V · E · W · (max_parents + 3)`` (dom ∧ ¬used ∧ parents, push/pop
@@ -102,6 +104,17 @@ def smoke() -> Dict[str, float]:
     session.run(session.prepare(pat2, name="smoke1"))
     info = session.cache_info()
     assert info["compiles"] == 1 and info["cache_hits"] >= 1, info
+    # the mesh-sharded path must be bit-identical on however many devices
+    # this host has (1 in the smoke container; collectives are identities)
+    sharded = Enumerator(
+        SubgraphIndex.build(tgt),
+        config=EngineConfig(n_workers=4, expand_width=4),
+        mesh=min(len(jax.devices()), 4),
+    )
+    res_sh = sharded.run(sharded.prepare(pat, name="smoke0-sharded"))
+    assert (res_sh.matches, res_sh.states) == (res.matches, res.states), (
+        res_sh.matches, res_sh.states, res.matches, res.states,
+    )
     return {
         "matches": float(res.matches),
         "states": float(res.states),

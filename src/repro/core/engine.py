@@ -20,13 +20,28 @@ This is the TPU-native form of the paper's work-stealing DFS (DESIGN.md §2):
 * Termination: the global entry count hits zero — the all-reduce analogue of
   the paper's ring-token detection.
 
-Everything is static-shape jnp inside ``lax.while_loop``; with the worker
-axis sharded over the mesh ``data`` axis and bitmap words over ``model``,
-pjit auto-partitions the steal round's cross-worker traffic into collectives.
+Everything is static-shape jnp inside ``lax.while_loop``.  Two execution
+paths share the expansion step (DESIGN.md §2.4):
 
-Counters use int32 (single-instance state counts in our collections are far
-below 2^31; the multi-query driver sums per-instance results in int64 on
-host).
+* **single device** (``run(plan, cfg)``): all ``V`` workers live in one
+  array program; the steal round is plain gathers/scatters over the ``V``
+  axis.
+* **mesh-sharded** (``run(plan, cfg, mesh=...)``): the ``V`` axis is
+  sharded over the mesh ``data`` axis via ``shard_map`` — each device owns
+  ``V / D`` worker stacks.  A steal round all-gathers the stack-occupancy
+  vector and each donor's bottom ``steal_chunk`` entries (``lax.all_gather``
+  over ``data``), every device computes the *same* global steal plan
+  (`repro.core.scheduler.plan_steals`), and scatters only the entries bound
+  for its local receivers.  Termination is a cross-device ``lax.psum`` of
+  the total entry count — the collective form of the paper's ring-token
+  detection.  With ``D == 1`` (or ``mesh=None``) the collectives are
+  identities and results are bit-identical to the single-device path.
+
+Counters (matches / states / steals / depth sums) are **per-worker int32**:
+on a mesh each device accumulates only its own workers' counts, so the
+per-device bound is 2^31 per *worker*, not per collection — single-instance
+state counts in our collections are far below that, and the multi-query
+driver sums per-instance results in int64 on host.
 """
 
 from __future__ import annotations
@@ -39,6 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import scheduler
 from repro.core.graph import WORD_BITS, bitmap_from_indices
@@ -137,6 +154,7 @@ class EngineResult(NamedTuple):
     per_worker_matches: np.ndarray
     overflow: bool
     match_buf: Optional[np.ndarray]
+    per_worker_steals: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -425,10 +443,11 @@ def init_state(plan: SearchPlan, cfg: EngineConfig) -> EngineState:
     )
 
 
-def make_round_fn(cfg: EngineConfig, plan: PlanArrays):
-    """Build the body of the outer loop: ``rebalance_interval`` expansion
-    steps followed by one steal round.  Exposed separately so the dry-run /
-    roofline can lower exactly one round (stable cost accounting)."""
+def make_expand_fn(cfg: EngineConfig, plan: PlanArrays):
+    """Build the purely worker-local part of one engine round:
+    ``rebalance_interval`` expansion steps, vmapped over whatever worker
+    axis the caller holds (all ``V`` workers single-device, or the local
+    ``V / D`` shard under ``shard_map``)."""
     if cfg.use_pallas:
         from repro.kernels import ops as kops
 
@@ -458,7 +477,7 @@ def make_round_fn(cfg: EngineConfig, plan: PlanArrays):
         out_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
     )
 
-    def body(state: EngineState) -> EngineState:
+    def expand(state: EngineState) -> EngineState:
         def inner(_, st: EngineState) -> EngineState:
             carry = (
                 st.st_depth, st.st_map, st.st_used, st.st_cand,
@@ -476,7 +495,19 @@ def make_round_fn(cfg: EngineConfig, plan: PlanArrays):
                 exp_depth=exp_depth, match_buf=mbuf, overflow=overflow,
             )
 
-        state = lax.fori_loop(0, cfg.rebalance_interval, inner, state)
+        return lax.fori_loop(0, cfg.rebalance_interval, inner, state)
+
+    return expand
+
+
+def make_round_fn(cfg: EngineConfig, plan: PlanArrays):
+    """Build the body of the outer loop: ``rebalance_interval`` expansion
+    steps followed by one steal round.  Exposed separately so the dry-run /
+    roofline can lower exactly one round (stable cost accounting)."""
+    expand = make_expand_fn(cfg, plan)
+
+    def body(state: EngineState) -> EngineState:
+        state = expand(state)
         if cfg.work_stealing and cfg.n_workers > 1:
             state = _steal_round(cfg, state)
         return state._replace(steps=state.steps + cfg.rebalance_interval)
@@ -492,6 +523,229 @@ def _engine_loop(cfg: EngineConfig, plan: PlanArrays, state: EngineState) -> Eng
         return (jnp.sum(state.size) > 0) & (state.steps < max_steps)
 
     return lax.while_loop(cond, body, state)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded execution: shard_map over the worker axis (DESIGN.md §2.4)
+# ---------------------------------------------------------------------------
+
+def mesh_worker_axis(mesh: Mesh) -> str:
+    """The mesh axis the worker dimension shards over: ``data`` by
+    convention, else the mesh's first axis."""
+    return "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+
+
+def mesh_signature(mesh: Optional[Mesh]) -> Optional[tuple]:
+    """Hashable identity of a mesh for compile-cache keys: axis names,
+    axis sizes, and the flat device ids."""
+    if mesh is None:
+        return None
+    return (
+        tuple(str(a) for a in mesh.axis_names),
+        tuple(int(s) for s in mesh.shape.values()),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
+def state_partition_specs(axis: str) -> EngineState:
+    """PartitionSpecs for :class:`EngineState`: worker-axis arrays sharded
+    over ``axis``, loop scalars replicated."""
+    P = PartitionSpec
+    return EngineState(
+        st_depth=P(axis, None),
+        st_map=P(axis, None, None),
+        st_used=P(axis, None, None),
+        st_cand=P(axis, None, None),
+        base=P(axis),
+        size=P(axis),
+        matches=P(axis),
+        states=P(axis),
+        exp_depth=P(axis),
+        steals=P(axis),
+        steal_depth=P(axis),
+        steal_rounds=P(),
+        steps=P(),
+        overflow=P(),
+        match_buf=P(axis, None, None),
+    )
+
+
+def plan_partition_specs() -> PlanArrays:
+    """PartitionSpecs for :class:`PlanArrays`: fully replicated (every
+    device needs the whole domain/adjacency bitmaps to expand its workers)."""
+    P = PartitionSpec
+    return PlanArrays(
+        order_valid=P(None),
+        parent_pos=P(None, None),
+        parent_dir=P(None, None),
+        parent_elab=P(None, None),
+        dom_bits=P(None, None),
+        adj_bits=P(None, None, None, None),
+        n_p=P(),
+    )
+
+
+def _steal_round_sharded(cfg: EngineConfig, state: EngineState, axis: str) -> EngineState:
+    """One steal round under ``shard_map``: ``state`` holds this device's
+    ``V / D`` worker stacks.
+
+    Protocol (the collective form of :func:`_steal_round`):
+
+    1. ``all_gather`` the local occupancy vectors → global ``sizes [V]``.
+    2. Every device runs the same deterministic
+       :func:`repro.core.scheduler.plan_steals` on it — no coordinator.
+    3. ``all_gather`` each donor's bottom ``steal_chunk`` stack rows (the
+       steal traffic: ``V·C·(1 + P + W_used + W)`` words per round).
+    4. Each device scatters only the donated entries whose destination
+       worker lives in its local shard; donors advance their ring-buffer
+       base by their (globally agreed) accepted count.
+
+    Identical to the single-device round entry-for-entry: the gathered
+    ``don_*`` arrays and the global plan are exactly what the unsharded
+    path computes in one address space.
+    """
+    policy = scheduler.StealPolicy(
+        steal_chunk=cfg.steal_chunk, keep_min=cfg.keep_min, recv_cap=cfg.recv_cap
+    )
+    v_loc, s_cap = state.st_depth.shape
+    c = cfg.steal_chunk
+    d = lax.axis_index(axis)
+
+    sizes = lax.all_gather(state.size, axis, tiled=True)  # [V]
+    v_tot = sizes.shape[0]
+    donate, accepted, dest_rank, dest_pos = scheduler.plan_steals(sizes, policy)
+    wor = scheduler.receiver_workers(sizes)  # [V] global worker per rank
+    any_transfer = jnp.sum(accepted) > 0
+
+    # gather local donors' bottom rows, then all-gather them to every device
+    slot_j = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (v_loc, c))
+    src_slot = (state.base[:, None] + slot_j) % s_cap  # [V_loc, C]
+    lidx = jnp.arange(v_loc, dtype=jnp.int32)[:, None]
+    don_depth = lax.all_gather(state.st_depth[lidx, src_slot], axis, tiled=True)
+    don_map = lax.all_gather(state.st_map[lidx, src_slot], axis, tiled=True)
+    don_used = lax.all_gather(state.st_used[lidx, src_slot], axis, tiled=True)
+    don_cand = lax.all_gather(state.st_cand[lidx, src_slot], axis, tiled=True)
+
+    # destination workers (global ids), restricted to this device's shard
+    slot_g = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), (v_tot, c))
+    taken = slot_g < accepted[:, None]  # [V, C]
+    dest_w = jnp.where(taken, wor[jnp.clip(dest_rank, 0, v_tot - 1)], -1)
+    local_dest = dest_w - d * v_loc
+    on_dev = (dest_w >= 0) & (local_dest >= 0) & (local_dest < v_loc)
+    safe_dest = jnp.clip(local_dest, 0, v_loc - 1)
+    # receivers are empty (size==0) so intake slot = (base + pos) % S
+    recv_base = jnp.where(on_dev, state.base[safe_dest], 0)
+    dst_slot = (recv_base + dest_pos) % s_cap
+    dw = jnp.where(on_dev, safe_dest, v_loc)  # drop off-device slots
+
+    st_depth = state.st_depth.at[dw, dst_slot].set(don_depth, mode="drop")
+    st_map = state.st_map.at[dw, dst_slot].set(don_map, mode="drop")
+    st_used = state.st_used.at[dw, dst_slot].set(don_used, mode="drop")
+    st_cand = state.st_cand.at[dw, dst_slot].set(don_cand, mode="drop")
+
+    # intake counts / steal metrics for local receivers only
+    flat_w = dw.reshape(-1)
+    on_flat = on_dev.reshape(-1)
+    recv_cnt = jnp.zeros((v_loc,), jnp.int32).at[flat_w].add(
+        jnp.where(on_flat, 1, 0), mode="drop"
+    )
+    depth_add = jnp.zeros((v_loc,), jnp.int32).at[flat_w].add(
+        jnp.where(on_flat, don_depth.reshape(-1), 0), mode="drop"
+    )
+
+    # local donors advance base by their slice of the global accepted vector
+    accepted_loc = lax.dynamic_slice_in_dim(accepted, d * v_loc, v_loc)
+    new_base = (state.base + accepted_loc) % s_cap
+    new_size = state.size - accepted_loc + recv_cnt
+
+    return state._replace(
+        st_depth=st_depth,
+        st_map=st_map,
+        st_used=st_used,
+        st_cand=st_cand,
+        base=new_base,
+        size=new_size,
+        steals=state.steals + recv_cnt,
+        steal_depth=state.steal_depth + depth_add,
+        steal_rounds=state.steal_rounds + any_transfer.astype(jnp.int32),
+    )
+
+
+def _sharded_device_loop(
+    cfg: EngineConfig, axis: str, plan: PlanArrays, state: EngineState
+) -> EngineState:
+    """Per-device program run under ``shard_map``: local expansion rounds,
+    collective steal rounds, and psum-based termination detection.
+
+    The loop carries the psum'd global entry count so the `while` condition
+    is collective-free; every device sees the same count and therefore runs
+    the same number of rounds (SPMD lockstep).
+    """
+    max_steps = cfg.max_steps or (1 << 30)
+    expand = make_expand_fn(cfg, plan)
+
+    def global_size(st: EngineState) -> jnp.ndarray:
+        return lax.psum(jnp.sum(st.size), axis)
+
+    def body(carry):
+        st, _ = carry
+        st = expand(st)
+        if cfg.work_stealing and cfg.n_workers > 1:
+            st = _steal_round_sharded(cfg, st, axis)
+        st = st._replace(steps=st.steps + cfg.rebalance_interval)
+        return st, global_size(st)
+
+    def cond(carry):
+        st, gsize = carry
+        return (gsize > 0) & (st.steps < max_steps)
+
+    state, _ = lax.while_loop(cond, body, (state, global_size(state)))
+    # overflow is device-local until here; replicate so the P() out-spec holds
+    overflow = lax.psum(state.overflow.astype(jnp.int32), axis) > 0
+    return state._replace(overflow=overflow)
+
+
+def make_sharded_engine_fn(cfg: EngineConfig, mesh: Mesh, axis: Optional[str] = None):
+    """Jitted ``(PlanArrays, EngineState) -> EngineState`` with the worker
+    axis sharded over ``axis`` of ``mesh`` via ``shard_map``.
+
+    ``cfg.n_workers`` must be a multiple of the axis size (the session API
+    snaps it up; `repro.core.session.Enumerator`).
+    """
+    axis = axis or mesh_worker_axis(mesh)
+    n_dev = int(mesh.shape[axis])
+    if cfg.n_workers % n_dev:
+        raise ValueError(
+            f"n_workers={cfg.n_workers} not divisible by mesh axis "
+            f"{axis!r} size {n_dev}; round up to a multiple"
+        )
+    specs = state_partition_specs(axis)
+    fn = shard_map(
+        functools.partial(_sharded_device_loop, cfg, axis),
+        mesh=mesh,
+        in_specs=(plan_partition_specs(), specs),
+        out_specs=specs,
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_fn_cached(cfg: EngineConfig, mesh: Mesh, axis: Optional[str]):
+    # Mesh hashes by device set + axis names, so repeated direct eng.run()
+    # calls over a collection reuse one jitted engine per (cfg, mesh) —
+    # the module-level analogue of _run_jit; the session layer keeps its
+    # own richer cache (shape buckets, counters).
+    return make_sharded_engine_fn(cfg, mesh, axis)
+
+
+def run_sharded(plan: SearchPlan, cfg: EngineConfig, mesh: Mesh) -> EngineResult:
+    """Enumerate with worker stacks sharded over ``mesh`` (see :func:`run`)."""
+    fn = _sharded_fn_cached(cfg, mesh, None)
+    arrays = make_plan_arrays(plan)
+    state = init_state(plan, cfg)
+    final = jax.block_until_ready(fn(arrays, state))
+    return result_from_state(final, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -573,8 +827,15 @@ def _run_jit(cfg: EngineConfig, plan: PlanArrays, state: EngineState) -> EngineS
     return _engine_loop(cfg, plan, state)
 
 
-def run(plan: SearchPlan, cfg: EngineConfig) -> EngineResult:
-    """Enumerate all isomorphic subgraphs described by ``plan``."""
+def run(plan: SearchPlan, cfg: EngineConfig, mesh: Optional[Mesh] = None) -> EngineResult:
+    """Enumerate all isomorphic subgraphs described by ``plan``.
+
+    With ``mesh=None`` (the default) all ``V`` workers run in one device
+    program — today's single-device behavior, unchanged.  With a mesh the
+    worker axis shards over its ``data`` axis (:func:`run_sharded`).
+    """
+    if mesh is not None:
+        return run_sharded(plan, cfg, mesh)
     arrays = make_plan_arrays(plan)
     state = init_state(plan, cfg)
     final = jax.block_until_ready(_run_jit(cfg, arrays, state))
@@ -602,4 +863,5 @@ def result_from_state(final: EngineState, cfg: EngineConfig) -> EngineResult:
         per_worker_matches=np.asarray(final.matches),
         overflow=bool(final.overflow),
         match_buf=np.asarray(final.match_buf) if cfg.collect_matches else None,
+        per_worker_steals=np.asarray(final.steals),
     )

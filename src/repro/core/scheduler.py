@@ -14,9 +14,15 @@ occupancy vector (the paper's ``work_available`` array):
     accepted slots are always a *prefix* of its donation (donors simply keep
     the rest).
 
-Everything is branch-free jnp so it lowers inside ``lax.while_loop`` and
-auto-partitions over the mesh ``data`` axis under pjit.  The same policy is
-reused host-side (numpy) by the GNN irregular-batch balancer
+Everything is branch-free jnp so it lowers inside ``lax.while_loop``, and —
+because the plan is a pure function of the occupancy vector — it is the
+*shared decision procedure* of both engine paths (DESIGN.md §2.3–§2.4):
+single-device, ``plan_steals`` consumes the local ``[V]`` sizes directly;
+mesh-sharded, each device calls it on the ``lax.all_gather``-ed global
+sizes inside ``shard_map`` and acts only on its own shard of the answer,
+so no coordinator and no extra agreement round are needed.  Counters stay
+int32 per worker per device (bounds in DESIGN.md §2.5).  The same policy
+is reused host-side (numpy) by the GNN irregular-batch balancer
 (`repro.models.gnn.sampler.balance_buckets`).
 """
 

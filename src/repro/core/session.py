@@ -14,10 +14,13 @@ session-oriented surface that amortizes all three:
   :class:`SearchPlan` whose padding is snapped to **shape buckets**
   (``p_pad ∈ {16, 32, 64, 128}``, fixed ``max_parents``), so thousands of
   patterns lower to a handful of XLA compilations.
-* :class:`Enumerator` — the session object: an :class:`EngineConfig`, a
-  keyed compile cache ``(kind, p_pad, max_parents, n_t, w, …) → jitted
-  engine`` with ``compiles`` / ``cache_hits`` counters, and three execution
-  methods sharing one code path:
+* :class:`Enumerator` — the session object: an :class:`EngineConfig`, an
+  optional device mesh (``mesh=`` shards the worker axis over the mesh
+  ``data`` axis via ``shard_map``; ``n_workers`` snaps up to a multiple of
+  the device count — see DESIGN.md §2.4), a keyed compile cache ``(kind,
+  mesh signature, p_pad, max_parents, n_t, w, …) → jitted engine`` with
+  ``compiles`` / ``cache_hits`` counters, and three execution methods
+  sharing one code path:
 
     - ``run(query)``                 — one query, one engine invocation;
     - ``run_batch(queries)``         — LPT-balanced vmapped packs (the
@@ -207,6 +210,7 @@ class MatchSet:
     mean_expand_depth: float
     per_worker_states: Optional[np.ndarray]
     per_worker_matches: Optional[np.ndarray]
+    per_worker_steals: Optional[np.ndarray]
     preprocess_s: float
     match_s: float
     plan: SearchPlan
@@ -281,11 +285,21 @@ class Enumerator:
         index: Union[SubgraphIndex, Graph, PackedGraph, None] = None,
         config: Optional[EngineConfig] = None,
         variant: str = "ri-ds-si-fc",
+        mesh: Union["jax.sharding.Mesh", int, None] = None,
         **config_kwargs,
     ):
         cfg = config or EngineConfig(**config_kwargs)
         if config is not None and config_kwargs:
             cfg = dataclasses.replace(config, **config_kwargs)
+        self.mesh = _coerce_mesh(mesh)
+        if self.mesh is not None:
+            axis = eng.mesh_worker_axis(self.mesh)
+            n_dev = int(self.mesh.shape[axis])
+            if cfg.n_workers % n_dev:
+                # snap up so every device owns the same number of stacks
+                cfg = dataclasses.replace(
+                    cfg, n_workers=((cfg.n_workers + n_dev - 1) // n_dev) * n_dev
+                )
         self.config = cfg
         self.variant = variant
         self.index = SubgraphIndex.build(index) if index is not None else None
@@ -303,14 +317,17 @@ class Enumerator:
         }
 
     def _engine_fn(self, cfg: EngineConfig, kind: str, pack: int, query: Query) -> Callable:
-        key = (cfg, kind, pack) + query.bucket
+        key = (cfg, kind, pack, eng.mesh_signature(self.mesh)) + query.bucket
         fn = self._engines.get(key)
         if fn is not None:
             self.cache_hits += 1
             return fn
         self.compiles += 1
         if kind == "single":
-            fn = jax.jit(functools.partial(eng._engine_loop, cfg))
+            if self.mesh is not None:
+                fn = eng.make_sharded_engine_fn(cfg, self.mesh)
+            else:
+                fn = jax.jit(functools.partial(eng._engine_loop, cfg))
         else:
             fn = jax.jit(jax.vmap(functools.partial(eng._engine_loop, cfg)))
         self._engines[key] = fn
@@ -378,6 +395,19 @@ class Enumerator:
         """
         qs: List[Query] = [self._coerce(q) for q in queries]
         cfg = self.config
+
+        if self.mesh is not None:
+            # The pack vmap does not compose with shard_map engines yet:
+            # under a mesh each query runs through the (cached) sharded
+            # single-query engine, yielding in input order.
+            for i, q in enumerate(qs):
+                if not q.plan.satisfiable:
+                    yield self._matchset(q, i, _empty_engine_result(), 0.0)
+                else:
+                    ms = self.run(q)
+                    ms.query_index = i
+                    yield ms
+            return
 
         groups: Dict[tuple, List[int]] = {}
         for i, q in enumerate(qs):
@@ -459,6 +489,7 @@ class Enumerator:
             mean_expand_depth=res.mean_expand_depth,
             per_worker_states=res.per_worker_states,
             per_worker_matches=res.per_worker_matches,
+            per_worker_steals=res.per_worker_steals,
             preprocess_s=query.prepare_s,
             match_s=match_s,
             plan=query.plan,
@@ -466,6 +497,23 @@ class Enumerator:
             _match_buf=res.match_buf,
             _materialize=materialize,
         )
+
+
+def _coerce_mesh(mesh) -> Optional["jax.sharding.Mesh"]:
+    """Accept a ``jax.sharding.Mesh``, an int device count (first ``n``
+    local devices on a 1-D ``data`` axis), or ``None``."""
+    if mesh is None or isinstance(mesh, jax.sharding.Mesh):
+        return mesh
+    if isinstance(mesh, int):
+        devs = jax.local_devices()
+        if mesh > len(devs):
+            raise ValueError(
+                f"mesh={mesh} devices requested but only {len(devs)} local "
+                "devices exist (on CPU set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N before importing jax)"
+            )
+        return jax.make_mesh((mesh,), ("data",), devices=devs[:mesh])
+    raise TypeError(f"mesh must be a Mesh, int, or None, got {type(mesh)!r}")
 
 
 # Process-wide sessions for the compatibility wrappers and benchmark

@@ -15,19 +15,55 @@ Three execution modes map to the session's three methods:
   * ``--mode stream``   results printed as packs drain (``stream``; the
     serving path).
 
+``--devices N`` runs the paper's worker sweep multi-device: the session's
+worker stacks shard over a 1-D ``data`` mesh of ``N`` devices
+(``shard_map``; DESIGN.md §2.4).  On a CPU-only host the flag forces ``N``
+virtual XLA devices (``--xla_force_host_platform_device_count``) so the
+scaling benchmarks run multi-"core" in CI; on a real backend it takes the
+first ``N`` of ``jax.local_devices()``.
+
 Reports per-instance matches / states / steps plus collection aggregates —
-the shape of the paper's experiment tables — and the session's compile
-cache counters.
+the shape of the paper's experiment tables — the session's compile cache
+counters, and (multi-device) per-device steal traffic.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
-from repro.core import EngineConfig, Enumerator, SubgraphIndex
-from repro.data import graphgen
+
+def _force_virtual_devices() -> None:
+    """Honor ``--devices N`` before jax locks the platform: XLA device count
+    is fixed at first backend initialization, so on CPU the flag must be in
+    ``XLA_FLAGS`` before ``import jax`` (transitively below)."""
+    n = None
+    for i, tok in enumerate(sys.argv):
+        if tok == "--devices" and i + 1 < len(sys.argv):
+            n = sys.argv[i + 1]
+        elif tok.startswith("--devices="):
+            n = tok.split("=", 1)[1]
+    if n is None:
+        return
+    try:
+        n = int(n)
+    except ValueError:
+        return  # argparse will report the usage error
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+_force_virtual_devices()
+
+import jax  # noqa: E402  (after the XLA_FLAGS shim, deliberately)
+
+from repro.core import EngineConfig, Enumerator, SubgraphIndex  # noqa: E402
+from repro.data import graphgen  # noqa: E402
 
 
 def main() -> int:
@@ -44,15 +80,27 @@ def main() -> int:
     ap.add_argument("--packed", action="store_true",
                     help="deprecated alias for --mode packed")
     ap.add_argument("--pack-size", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard worker stacks over N devices (0 = no mesh; "
+                    "on CPU forces N virtual XLA devices)")
     args = ap.parse_args()
     mode = "packed" if args.packed else args.mode
+
+    mesh = None
+    if args.devices:
+        if args.devices > len(jax.local_devices()):
+            raise SystemExit(
+                f"--devices {args.devices}: only {len(jax.local_devices())} "
+                "local devices (is XLA_FLAGS set by another import?)"
+            )
+        mesh = args.devices
 
     instances = graphgen.make_collection(
         args.collection, pattern_edges=(8, 16, 24), patterns_per_target=2,
         scale=args.scale, seed=args.seed,
     )
     cfg = EngineConfig(n_workers=args.workers, expand_width=args.expand)
-    session = Enumerator(config=cfg, variant=args.variant)
+    session = Enumerator(config=cfg, variant=args.variant, mesh=mesh)
 
     indices: dict = {}
     t0 = time.perf_counter()
@@ -65,25 +113,34 @@ def main() -> int:
                                        index=indices[key]))
 
     matches = states = 0
+    pw_steals = None
+
+    def tally(ms):
+        nonlocal matches, states, pw_steals
+        matches += ms.matches
+        states += ms.states
+        if ms.per_worker_steals is not None:
+            if pw_steals is None:
+                pw_steals = ms.per_worker_steals.astype("int64").copy()
+            else:
+                pw_steals += ms.per_worker_steals
+
     if mode == "single":
         for q in queries:
             ms = session.run(q)
             print(f"{ms.name:40s} matches={ms.matches:<8d} states={ms.states:<9d} "
                   f"steps={ms.steps:<7d} steals={ms.steals:<5d} {ms.match_s:6.2f}s")
-            matches += ms.matches
-            states += ms.states
+            tally(ms)
     elif mode == "packed":
         for ms in session.run_batch(queries, pack_size=args.pack_size):
             print(f"{ms.name:40s} matches={ms.matches:<8d} states={ms.states:<9d} "
                   f"steps={ms.steps}")
-            matches += ms.matches
-            states += ms.states
+            tally(ms)
     else:  # stream: print in completion order, as the serving loop would
         for ms in session.stream(queries, pack_size=args.pack_size):
             print(f"{ms.name:40s} matches={ms.matches:<8d} states={ms.states:<9d} "
                   f"steps={ms.steps}")
-            matches += ms.matches
-            states += ms.states
+            tally(ms)
 
     total = time.perf_counter() - t0
     info = session.cache_info()
@@ -91,6 +148,12 @@ def main() -> int:
           f"{matches} matches, {states} states, {total:.1f}s "
           f"({states/max(total,1e-9):.0f} states/s); "
           f"engine compiles={info['compiles']} cache_hits={info['cache_hits']}")
+    if args.devices and pw_steals is not None:
+        v_per_dev = session.config.n_workers // args.devices
+        per_dev = pw_steals.reshape(args.devices, v_per_dev).sum(axis=1)
+        print(f"mesh: {args.devices} device(s) x {v_per_dev} workers; "
+              "entries stolen into each device: "
+              + " ".join(f"d{i}={int(s)}" for i, s in enumerate(per_dev)))
     return 0
 
 

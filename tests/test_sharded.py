@@ -1,0 +1,130 @@
+"""Mesh-sharded execution layer (DESIGN.md §2.4).
+
+Single-device assertions always run; the multi-device sweep needs virtual
+devices (device count is locked at first jax init, so conftest keeps tests
+on the real 1-device platform) and runs in CI as a separate process:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m pytest tests/test_sharded.py -q
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Enumerator, SubgraphIndex
+from repro.core import engine as eng
+from repro.core.graph import PackedGraph
+from repro.core.plan import build_plan
+from tests.conftest import extract_connected_pattern, random_graph
+
+CFG = EngineConfig(n_workers=4, expand_width=2)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+)
+
+
+def _case(rng, n=40, m=120):
+    tgt = random_graph(rng, n, m, n_labels=3)
+    pat = extract_connected_pattern(rng, tgt, 5)
+    return tgt, pat
+
+
+def _result_tuple(r):
+    return (r.matches, r.states, r.steps, r.steals, r.steal_rounds)
+
+
+def test_mesh_none_is_the_existing_engine(rng):
+    """Enumerator(mesh=None) must reproduce eng.run() exactly — the
+    single-device fallback is the pre-sharding engine, untouched."""
+    tgt, pat = _case(rng)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt))
+    direct = eng.run(plan, CFG)
+
+    session = Enumerator(SubgraphIndex.build(tgt), config=CFG, mesh=None)
+    ms = session.run(session.prepare(pat))
+    assert (ms.matches, ms.states, ms.steps, ms.steals) == (
+        direct.matches, direct.states, direct.steps, direct.steals,
+    )
+    np.testing.assert_array_equal(ms.per_worker_states, direct.per_worker_states)
+    np.testing.assert_array_equal(ms.per_worker_matches, direct.per_worker_matches)
+
+
+def test_mesh_size_one_bit_identical(rng):
+    """On a 1-device mesh every collective is an identity: the shard_map
+    engine must agree with the plain engine counter-for-counter."""
+    tgt, pat = _case(rng)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt))
+    ref = eng.run(plan, CFG)
+    mesh = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1])
+    sh = eng.run(plan, CFG, mesh=mesh)
+    assert _result_tuple(sh) == _result_tuple(ref)
+    np.testing.assert_array_equal(sh.per_worker_states, ref.per_worker_states)
+    np.testing.assert_array_equal(sh.per_worker_steals, ref.per_worker_steals)
+
+
+def test_session_mesh_int_coercion_and_snapping(rng):
+    tgt, _ = _case(rng)
+    s = Enumerator(SubgraphIndex.build(tgt), config=CFG, mesh=1)
+    assert s.mesh is not None and s.config.n_workers == CFG.n_workers
+    with pytest.raises(ValueError):
+        Enumerator(SubgraphIndex.build(tgt), config=CFG,
+                   mesh=len(jax.local_devices()) + 1)
+
+
+@multi_device
+def test_multi_device_results_identical(rng):
+    """The acceptance invariant: sharding over 2 (and 4) devices changes
+    nothing — not even per-worker counters."""
+    tgt, pat = _case(rng, n=48, m=160)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt))
+    cfg = EngineConfig(n_workers=8, expand_width=4)
+    ref = eng.run(plan, cfg)
+    for n_dev in (2, 4):
+        if n_dev > len(jax.devices()) or cfg.n_workers % n_dev:
+            continue
+        mesh = jax.make_mesh((n_dev,), ("data",), devices=jax.devices()[:n_dev])
+        sh = eng.run(plan, cfg, mesh=mesh)
+        assert _result_tuple(sh) == _result_tuple(ref), n_dev
+        np.testing.assert_array_equal(sh.per_worker_states, ref.per_worker_states)
+        np.testing.assert_array_equal(sh.per_worker_steals, ref.per_worker_steals)
+
+
+@multi_device
+def test_multi_device_session_and_worker_snapping(rng):
+    tgt, pat = _case(rng, n=48, m=160)
+    base = Enumerator(SubgraphIndex.build(tgt), n_workers=8, expand_width=4)
+    ref = base.run(base.prepare(pat))
+
+    n_dev = 2
+    s = Enumerator(SubgraphIndex.build(tgt), n_workers=7, expand_width=4,
+                   mesh=n_dev)
+    assert s.config.n_workers == 8  # snapped up to a multiple of the mesh
+    ms = s.run(s.prepare(pat))
+    assert ms.matches == ref.matches  # match count is V-invariant
+
+    # batch/stream run through the sharded single path, in order
+    qs = [s.prepare(pat, name=f"q{i}") for i in range(3)]
+    out = s.run_batch(qs)
+    assert [m.query_index for m in out] == [0, 1, 2]
+    assert all(m.matches == ref.matches for m in out)
+
+
+@multi_device
+def test_multi_device_engine_rejects_indivisible_workers():
+    mesh = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+    with pytest.raises(ValueError):
+        eng.make_sharded_engine_fn(EngineConfig(n_workers=3), mesh)
+
+
+@multi_device
+def test_mesh_signature_distinguishes_cache_entries(rng):
+    """Same config, different meshes must not share a compiled engine."""
+    tgt, pat = _case(rng, n=48, m=160)
+    idx = SubgraphIndex.build(tgt)
+    a = Enumerator(idx, n_workers=8, expand_width=4, mesh=1)
+    b = Enumerator(idx, n_workers=8, expand_width=4, mesh=2)
+    assert eng.mesh_signature(a.mesh) != eng.mesh_signature(b.mesh)
+    assert a.run(a.prepare(pat)).matches == b.run(b.prepare(pat)).matches

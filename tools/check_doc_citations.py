@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Fail CI when a doc citation dangles.
+
+Scans the source tree for ``<File>.md §<section>`` citations (the repo
+convention for pointing code at docs/DESIGN.md, docs/EXPERIMENTS.md, …)
+and verifies that
+
+  1. the cited file exists (in ``docs/`` or the repo root), and
+  2. it contains a heading for the cited section (a ``#``-line whose
+     ``§<section>`` token matches exactly — ``§2`` does not resolve via a
+     ``§2.2`` heading, and vice versa).
+
+Usage: ``python tools/check_doc_citations.py`` (exit 1 on any dangling
+citation, listing every offender).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "examples", "benchmarks", "tests", "tools")
+DOC_DIRS = (ROOT / "docs", ROOT)
+
+# "DESIGN.md §2.4", "EXPERIMENTS.md §Perf." (trailing dot = sentence end)
+CITATION = re.compile(r"([A-Za-z0-9_\-]+\.md)\s*§([A-Za-z0-9.]+)")
+
+
+def find_doc(name: str) -> Path | None:
+    for d in DOC_DIRS:
+        p = d / name
+        if p.is_file():
+            return p
+    return None
+
+
+def headings_sections(doc: Path) -> set:
+    """All §-tokens appearing in markdown headings of ``doc``."""
+    out = set()
+    for line in doc.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("#"):
+            out.update(m.group(1) for m in re.finditer(r"§([A-Za-z0-9.]+)", line))
+    return out
+
+
+def main() -> int:
+    sections_cache: dict = {}
+    errors = []
+    for dirname in SCAN_DIRS:
+        base = ROOT / dirname
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            text = path.read_text(encoding="utf-8", errors="replace")
+            for lineno, line in enumerate(text.splitlines(), 1):
+                for m in CITATION.finditer(line):
+                    name, section = m.group(1), m.group(2).rstrip(".")
+                    where = f"{path.relative_to(ROOT)}:{lineno}"
+                    doc = find_doc(name)
+                    if doc is None:
+                        errors.append(f"{where}: cites missing file {name}")
+                        continue
+                    if doc not in sections_cache:
+                        sections_cache[doc] = headings_sections(doc)
+                    if section not in sections_cache[doc]:
+                        errors.append(
+                            f"{where}: {name} has no §{section} heading "
+                            f"(has: {', '.join(sorted(sections_cache[doc])) or 'none'})"
+                        )
+    if errors:
+        print(f"{len(errors)} dangling doc citation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("all doc citations resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
