@@ -1,0 +1,166 @@
+"""Domain-preprocessing benchmark: host loop vs jitted device fixpoint vs
+Pallas-interpret, plus a prune-quality table (AC → FC vs AC ⇄ FC).
+
+  PYTHONPATH=src python -m benchmarks.bench_domains [--patterns N] [--smoke]
+
+Three ways to compute RI-DS domains for a ≥ 32-pattern same-bucket batch
+(DESIGN.md §5):
+
+  * ``host``   — the numpy oracle, one Python arc-loop per query (the old
+    `core/domains.py` path and still the correctness reference);
+  * ``jitted`` — the device fixpoint, **one vmapped jitted call** for the
+    whole padded batch (the `Enumerator.prepare_batch` backend);
+  * ``pallas`` — the same engine with the row-AND-any reduction routed
+    through the Pallas kernels in **interpret mode** (semantics validation;
+    slower than jnp on CPU — see API.md's use_pallas caveat), measured on a
+    small slice.
+
+Asserts (the CI smoke gate):
+
+  * device bits == numpy-oracle bits for every pattern and both variants;
+  * the batched jitted call beats the per-query host loop in wall-clock;
+  * AC ⇄ FC (ri-ds-si-acfc) domains are never larger than AC → FC.
+
+Emits CSV rows (name, us_per_query, derived) and a JSON artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+try:
+    from benchmarks import common
+except ImportError:  # executed from an arbitrary cwd
+    import repro.bench  # noqa: F401  (puts the repo root on sys.path)
+    from benchmarks import common
+
+import numpy as np
+
+from repro.core import SubgraphIndex
+from repro.core import domains as dom_mod
+from repro.core.graph import popcount
+from repro.data import graphgen
+
+
+def _corpus(n_patterns: int, smoke: bool, seed: int):
+    n, m = (90, 360) if smoke else (200, 900)
+    tgt = graphgen.random_graph(n, m, n_labels=4, seed=seed)
+    pats = [graphgen.extract_pattern(tgt, 5 + (i % 4), seed=seed + 1 + i)
+            for i in range(n_patterns)]
+    return tgt, pats
+
+
+def run(n_patterns: int = 32, smoke: bool = False, seed: int = 7) -> dict:
+    assert n_patterns >= 32, "the acceptance criterion is a >=32-pattern batch"
+    tgt, pats = _corpus(n_patterns, smoke, seed)
+    index = SubgraphIndex.build(tgt)
+    packed = index.packed
+
+    # one shared shape bucket (pads = corpus maxima) => one compilation
+    dims = [dom_mod.domain_bucket(p) for p in pats]
+    p_pad = max(d[0] for d in dims)
+    a_pad = max(d[1] for d in dims)
+    l_pad = max(d[2] for d in dims)
+
+    flags = dict(use_ac=True, use_fc=True, interleave=False)
+
+    def batch(use_pallas=False, patterns=pats, interleave=False):
+        return dom_mod.compute_domains_batch(
+            patterns, packed, use_ac=True, use_fc=True, interleave=interleave,
+            use_pallas=use_pallas, p_pad=p_pad, arc_pad=a_pad, loop_pad=l_pad,
+            batch_pad=len(patterns),
+        )
+
+    def best_of(fn, reps=3):
+        """Best wall-clock of ``reps`` runs (de-noises the CI smoke gate)."""
+        best, out = float("inf"), None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    # --- host loop (the old per-query path; correctness reference) --------
+    t_host, host = best_of(
+        lambda: [dom_mod.compute_domains(p, packed, **flags) for p in pats]
+    )
+
+    # --- jitted batched device fixpoint ----------------------------------
+    batch()  # warm-up: one compilation per bucket is the amortized regime
+    t_jit, dev = best_of(batch)
+
+    for h, d in zip(host, dev):
+        assert h.satisfiable == d.satisfiable
+        np.testing.assert_array_equal(h.bits, d.bits)
+    assert t_jit < t_host, (
+        f"batched device preprocessing ({t_jit:.3f}s) must beat the "
+        f"per-query host loop ({t_host:.3f}s) on a {n_patterns}-pattern batch"
+    )
+
+    # --- Pallas interpret mode (semantics check; small slice) -------------
+    n_pal = 2 if smoke else 4
+    pal_pats = pats[:n_pal]
+    batch(use_pallas=True, patterns=pal_pats)  # warm-up
+    t_pal, pal = best_of(lambda: batch(use_pallas=True, patterns=pal_pats),
+                         reps=1 if smoke else 2)
+    for h, d in zip(host[:n_pal], pal):
+        np.testing.assert_array_equal(h.bits, d.bits)
+
+    # --- prune quality: AC -> FC vs AC <-> FC -----------------------------
+    batch(interleave=True)  # warm-up (separate static-flag compilation)
+    t_joint, joint = best_of(lambda: batch(interleave=True))
+    bits_seq = sum(int(popcount(r.bits).sum()) for r in dev)
+    bits_joint = sum(int(popcount(r.bits).sum()) for r in joint)
+    tightened = sum(
+        1 for a, b in zip(dev, joint)
+        if int(popcount(b.bits).sum()) < int(popcount(a.bits).sum())
+        or (a.satisfiable and not b.satisfiable)
+    )
+    assert bits_joint <= bits_seq, "AC ⇄ FC may never enlarge domains"
+
+    n = len(pats)
+    print("variant,total_domain_bits,unsat_queries,queries_tightened")
+    print(f"ri-ds-si-fc,{bits_seq},{sum(not r.satisfiable for r in dev)},-")
+    print(f"ri-ds-si-acfc,{bits_joint},{sum(not r.satisfiable for r in joint)},{tightened}")
+    print()
+    print(common.csv_row("domains_host_loop", t_host / n * 1e6, "numpy oracle"))
+    print(common.csv_row("domains_jitted_batch", t_jit / n * 1e6,
+                         f"speedup={t_host / t_jit:.1f}x bucket=({p_pad},{a_pad},{l_pad})"))
+    print(common.csv_row("domains_jitted_acfc", t_joint / n * 1e6, "joint fixpoint"))
+    print(common.csv_row("domains_pallas_interpret", t_pal / n_pal * 1e6,
+                         f"n={n_pal} (interpret mode: validation, not speed)"))
+    payload = dict(
+        n_patterns=n,
+        bucket=dict(p_pad=p_pad, arc_pad=a_pad, loop_pad=l_pad),
+        host_s=t_host,
+        jitted_batch_s=t_jit,
+        jitted_acfc_s=t_joint,
+        pallas_interpret_s=t_pal,
+        pallas_patterns=n_pal,
+        speedup=t_host / t_jit,
+        domain_bits_fc=bits_seq,
+        domain_bits_acfc=bits_joint,
+        queries_tightened=tightened,
+    )
+    common.save_json("domains", payload)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--patterns", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small target for CI (same assertions)")
+    args = ap.parse_args()
+    out = run(n_patterns=args.patterns, smoke=args.smoke, seed=args.seed)
+    print(f"\n{out['n_patterns']} patterns, one bucket {out['bucket']}: "
+          f"host loop {out['host_s']:.3f}s -> batched device "
+          f"{out['jitted_batch_s']:.3f}s ({out['speedup']:.1f}x); "
+          f"AC⇄FC tightened {out['queries_tightened']} queries "
+          f"({out['domain_bits_fc']} -> {out['domain_bits_acfc']} domain bits)")
+
+
+if __name__ == "__main__":
+    main()

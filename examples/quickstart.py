@@ -4,11 +4,12 @@
 
 Builds a target, indexes it **once** (`SubgraphIndex`), opens an
 `Enumerator` session, and prepares one `Query` per algorithm variant
-(RI, RI-DS, RI-DS-SI, RI-DS-SI-FC).  All four queries share the session's
-shape-bucketed engine cache, so the engine compiles once and every later
-run is a cache hit — the session prints its own counters to prove it.
-Finally the same queries go through `run_batch` (the vmapped multi-query
-path) and must produce identical counts.
+(RI, RI-DS, RI-DS-SI, RI-DS-SI-FC, and the AC ⇄ FC joint-fixpoint
+RI-DS-SI-ACFC).  All queries share the session's shape-bucketed engine
+cache, so the engine compiles once and every later run is a cache hit —
+the session prints its own counters to prove it.  Finally the same
+queries go through `run_batch` (the vmapped multi-query path) and must
+produce identical counts.
 """
 
 from repro.core import EngineConfig, Enumerator, SubgraphIndex
@@ -26,7 +27,7 @@ session = Enumerator(index, config=EngineConfig(
     n_workers=8, expand_width=4, steal_chunk=4))
 
 queries = [session.prepare(pattern, variant=v, name=v)
-           for v in ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc")]
+           for v in ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc", "ri-ds-si-acfc")]
 
 single = {}
 for q in queries:
@@ -38,7 +39,7 @@ for q in queries:
 
 info = session.cache_info()
 print(f"\nengine compiles={info['compiles']} cache_hits={info['cache_hits']} "
-      f"(4 variants, one shape bucket)")
+      f"(5 variants, one shape bucket)")
 
 # The batch path shares the same cache and must agree exactly.
 for ms in session.run_batch(queries, pack_size=4):

@@ -60,7 +60,8 @@ def enumerate_subgraphs(
       target: the target graph; a pre-packed :class:`PackedGraph` is reused
         across queries against the same target (the common case in the
         paper's collections: thousands of patterns per target).
-      variant: ``ri`` | ``ri-ds`` | ``ri-ds-si`` | ``ri-ds-si-fc``.
+      variant: ``ri`` | ``ri-ds`` | ``ri-ds-si`` | ``ri-ds-si-fc`` |
+        ``ri-ds-si-acfc`` (AC ⇄ FC joint fixpoint, DESIGN.md §5).
       config: engine configuration; keyword overrides accepted.
     """
     cfg = config or EngineConfig(**config_kwargs)

@@ -153,6 +153,7 @@ def greatest_constraint_first(
         elif iv < iu:
             # edge (u -> v), v ordered earlier: at position iu, parent iv, in-dir
             parents[iu].append((iv, 1, int(l)))
-        # self loops (iu == iv) are handled by domain label/degree compat +
-        # an explicit self-loop check is not supported; biochemical data has none.
+        # self loops (iu == iv) cannot be parent constraints (one position);
+        # they are enforced as unary domain constraints in
+        # repro.core.domains.initial_domains (DESIGN.md §5).
     return Ordering(order=np.asarray(order, dtype=np.int32), parents=tuple(tuple(p) for p in parents))

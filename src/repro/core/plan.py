@@ -2,21 +2,31 @@
 
 Bundles everything the vectorized search needs as dense, padded arrays:
 ordering-position-indexed domains, parent constraint tables and the packed
-target graph.  All preprocessing (ordering + domains) happens on host in
-numpy; the arrays are small except the bitmaps, which the engine shards.
+target graph.  Ordering happens on host in numpy; domains come from the
+numpy oracle or, via ``domains=``, from the device-resident fixpoint engine
+(DESIGN.md §5).  The arrays are small except the bitmaps, which the engine
+shards.
+
+Pattern **self-loops** never appear in the parent tables (both endpoints
+share one ordering position); they are enforced as unary constraints baked
+into ``dom_bits`` by ``initial_domains``, which the engine/ref candidate
+checks inherit (candidates are always ⊆ the position's domain).
 
 Variants (paper terminology):
 
-  * ``ri``          — RI: static domains are label+degree compat only.
-  * ``ri-ds``       — RI-DS: + arc-consistent domains, singletons first.
-  * ``ri-ds-si``    — + domain-size tie-breaking in the ordering (§4.2.1).
-  * ``ri-ds-si-fc`` — + singleton forward checking (§4.2.2).
+  * ``ri``            — RI: static domains are label+degree compat only.
+  * ``ri-ds``         — RI-DS: + arc-consistent domains, singletons first.
+  * ``ri-ds-si``      — + domain-size tie-breaking in the ordering (§4.2.1).
+  * ``ri-ds-si-fc``   — + singleton forward checking (§4.2.2).
+  * ``ri-ds-si-acfc`` — AC ⇄ FC interleaved to their *joint* fixpoint
+    (DESIGN.md §5): FC removals re-trigger AC, so domains are never larger
+    (often smaller) than ``ri-ds-si-fc``'s sequential AC → FC pass.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -24,7 +34,22 @@ from repro.core import domains as dom_mod
 from repro.core import ordering as ord_mod
 from repro.core.graph import Graph, PackedGraph, popcount
 
-VARIANTS = ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc")
+VARIANTS = ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc", "ri-ds-si-acfc")
+
+
+def variant_flags(variant: str) -> Dict[str, bool]:
+    """Decompose a variant name into preprocessing switches:
+    ``use_ac`` (arc consistency), ``use_si`` (domain-size ordering
+    tie-break), ``use_fc`` (singleton forward checking), ``interleave``
+    (AC ⇄ FC joint fixpoint)."""
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}, expected one of {VARIANTS}")
+    return dict(
+        use_ac=variant != "ri",
+        use_si=variant in ("ri-ds-si", "ri-ds-si-fc", "ri-ds-si-acfc"),
+        use_fc=variant in ("ri-ds-si-fc", "ri-ds-si-acfc"),
+        interleave=variant == "ri-ds-si-acfc",
+    )
 
 
 @dataclasses.dataclass
@@ -68,18 +93,31 @@ def build_plan(
     p_pad: Optional[int] = None,
     max_parents: Optional[int] = None,
     ac_iters: Optional[int] = None,
+    domains: Optional[dom_mod.DomainResult] = None,
 ) -> SearchPlan:
-    """Run preprocessing (domains + ordering) and emit a :class:`SearchPlan`."""
-    if variant not in VARIANTS:
-        raise ValueError(f"unknown variant {variant!r}, expected one of {VARIANTS}")
-    use_ds = variant != "ri"
-    use_si = variant in ("ri-ds-si", "ri-ds-si-fc")
-    use_fc = variant == "ri-ds-si-fc"
+    """Run preprocessing (domains + ordering) and emit a :class:`SearchPlan`.
+
+    ``domains`` short-circuits the domain pipeline with a precomputed
+    :class:`~repro.core.domains.DomainResult` (the batched device
+    preprocessing path, `repro.core.session.Enumerator.prepare_batch`);
+    it must match the variant's flags — the session guarantees this.
+    """
+    flags = variant_flags(variant)
+    use_ds, use_si = flags["use_ac"], flags["use_si"]
 
     # --- domains ---------------------------------------------------------
-    dres = dom_mod.compute_domains(
-        pattern, target, use_ac=use_ds, use_fc=use_fc, ac_iters=ac_iters
-    )
+    if domains is not None:
+        if domains.bits.shape != (pattern.n, target.w):
+            raise ValueError(
+                f"precomputed domains shape {domains.bits.shape} != "
+                f"{(pattern.n, target.w)}"
+            )
+        dres = domains
+    else:
+        dres = dom_mod.compute_domains(
+            pattern, target, use_ac=use_ds, use_fc=flags["use_fc"],
+            ac_iters=ac_iters, interleave=flags["interleave"],
+        )
     dom_sizes = popcount(dres.bits)
 
     # --- ordering ----------------------------------------------------------

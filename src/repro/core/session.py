@@ -29,6 +29,12 @@ session-oriented surface that amortizes all three:
     - ``stream(queries)``            — generator yielding a
       :class:`MatchSet` per query as packs drain (the serving path).
 
+  Preprocessing batches too (DESIGN.md §5): ``prepare_batch(patterns)``
+  runs the AC ⇄ FC domain fixpoint for a whole padded pattern batch as one
+  vmapped jitted call on device, keyed into the same compile cache; raw
+  ``Graph`` inputs to ``run_batch``/``stream`` route through it
+  automatically (``domain_backend='numpy'`` restores the host loop).
+
 Results unify into :class:`MatchSet`: counts, per-worker statistics, and
 lazy match materialization (``mappings()`` re-runs the prepared query with
 a match buffer only when asked).
@@ -55,10 +61,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import domains as dom_mod
 from repro.core import engine as eng
 from repro.core.engine import EngineConfig, EngineResult
 from repro.core.graph import Graph, PackedGraph, popcount
-from repro.core.plan import SearchPlan, build_plan
+from repro.core.plan import SearchPlan, build_plan, variant_flags
 from repro.core.scheduler import balance_assignment
 
 # Padded pattern-position buckets: every plan's ``p_pad`` snaps up to one of
@@ -82,6 +89,23 @@ def snap_p_pad(n_p: int) -> int:
             return b
     top = SHAPE_BUCKETS[-1]
     return ((n_p + top - 1) // top) * top
+
+
+def snap_arc_pad(n_arcs: int) -> int:
+    """Arc-slot bucket for the device domain engine: multiples of 8."""
+    return max(8, ((n_arcs + 7) // 8) * 8)
+
+
+def snap_loop_pad(n_loops: int) -> int:
+    """Self-loop-slot bucket: 1 (the loop-free common case) or multiples
+    of 4."""
+    return 1 if n_loops == 0 else ((n_loops + 3) // 4) * 4
+
+
+def snap_batch_pad(n: int) -> int:
+    """Pattern-batch lane bucket: next power of two (inert lanes replicate
+    lane 0 and are discarded), so B patterns cost O(log B) compilations."""
+    return 1 << max(n - 1, 0).bit_length()
 
 
 # ---------------------------------------------------------------------------
@@ -186,9 +210,14 @@ def prepare_query(
         pattern=pattern,
         plan=plan,
         variant=variant,
-        name=name or f"q{pattern.n}n{pattern.m}m",
+        name=name or _default_name(pattern),
         prepare_s=time.perf_counter() - t0,
     )
+
+
+def _default_name(pattern: Graph) -> str:
+    """Default query name, shared by prepare_query and prepare_batch."""
+    return f"q{pattern.n}n{pattern.m}m"
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +315,7 @@ class Enumerator:
         config: Optional[EngineConfig] = None,
         variant: str = "ri-ds-si-fc",
         mesh: Union["jax.sharding.Mesh", int, None] = None,
+        domain_backend: str = "device",
         **config_kwargs,
     ):
         cfg = config or EngineConfig(**config_kwargs)
@@ -300,10 +330,18 @@ class Enumerator:
                 cfg = dataclasses.replace(
                     cfg, n_workers=((cfg.n_workers + n_dev - 1) // n_dev) * n_dev
                 )
+        if domain_backend not in ("device", "numpy"):
+            raise ValueError(
+                f"domain_backend must be 'device' or 'numpy', got {domain_backend!r}"
+            )
         self.config = cfg
         self.variant = variant
+        self.domain_backend = domain_backend
         self.index = SubgraphIndex.build(index) if index is not None else None
         self._engines: Dict[tuple, Callable] = {}
+        # target-side device arrays for batched domain preprocessing, keyed
+        # by the packed target's identity (pinned so ids can't be recycled)
+        self._dom_targets: Dict[int, Tuple[PackedGraph, dom_mod.TargetDomainArrays]] = {}
         self.compiles = 0
         self.cache_hits = 0
 
@@ -351,8 +389,151 @@ class Enumerator:
             )
         return prepare_query(pattern, idx, variant=variant or self.variant, name=name)
 
+    def prepare_batch(
+        self,
+        patterns: Sequence[Graph],
+        variant: Optional[str] = None,
+        names: Optional[Sequence[str]] = None,
+        index: Union[SubgraphIndex, Graph, PackedGraph, None] = None,
+        backend: Optional[str] = None,
+    ) -> List[Query]:
+        """Prepare a batch of patterns with **device-resident** domain
+        preprocessing (DESIGN.md §5): patterns are grouped by domain shape
+        bucket ``(p_pad, arc_pad, loop_pad)``, each group's AC ⇄ FC fixpoint
+        runs as **one vmapped jitted call** (padded to a power-of-two lane
+        count), and the jitted fixpoints are keyed into this session's
+        compile cache alongside the engines.  Results are bit-identical to
+        per-query :meth:`prepare` (the numpy oracle) — only the wall-clock
+        changes.  ``backend='numpy'`` (or ``Enumerator(domain_backend=
+        'numpy')``) falls back to per-query host preprocessing.
+        """
+        idx = index if index is not None else self.index
+        if idx is None:
+            raise ValueError(
+                "Enumerator has no default SubgraphIndex; pass index= to "
+                "prepare_batch() or construct Enumerator(index, ...)"
+            )
+        idx = SubgraphIndex.build(idx)
+        variant = variant or self.variant
+        patterns = list(patterns)
+        if names is not None and len(names) != len(patterns):
+            raise ValueError(
+                f"names has {len(names)} entries for {len(patterns)} patterns"
+            )
+        name_of = lambda i, p: (
+            names[i] if names is not None else _default_name(p)
+        )
+        backend = backend or self.domain_backend
+        if backend == "numpy":
+            return [
+                self.prepare(p, variant=variant, name=name_of(i, p), index=idx)
+                for i, p in enumerate(patterns)
+            ]
+
+        flags = variant_flags(variant)
+        groups: Dict[tuple, List[int]] = {}
+        for i, p in enumerate(patterns):
+            n_p, n_a, n_l = dom_mod.domain_bucket(p)
+            key = (snap_p_pad(n_p), snap_arc_pad(n_a), snap_loop_pad(n_l))
+            groups.setdefault(key, []).append(i)
+
+        out: List[Optional[Query]] = [None] * len(patterns)
+        tgt_arrays = self._target_domain_arrays(idx)
+        for (p_pad, a_pad, l_pad), idxs in groups.items():
+            b_pad = snap_batch_pad(len(idxs))
+            fn = self._domain_fn(flags, b_pad, p_pad, a_pad, l_pad, idx)
+            t0 = time.perf_counter()
+            doms = dom_mod.compute_domains_batch(
+                [patterns[i] for i in idxs],
+                idx.packed,
+                use_ac=flags["use_ac"],
+                use_fc=flags["use_fc"],
+                interleave=flags["interleave"],
+                use_pallas=self.config.use_pallas,
+                p_pad=p_pad,
+                arc_pad=a_pad,
+                loop_pad=l_pad,
+                batch_pad=b_pad,
+                tgt_arrays=tgt_arrays,
+                fn=fn,
+            )
+            dom_s = (time.perf_counter() - t0) / max(len(idxs), 1)
+            for i, dres in zip(idxs, doms):
+                t1 = time.perf_counter()
+                plan = build_plan(
+                    patterns[i],
+                    idx.packed,
+                    variant=variant,
+                    p_pad=snap_p_pad(patterns[i].n),
+                    max_parents=DEFAULT_MAX_PARENTS,
+                    domains=dres,
+                )
+                out[i] = Query(
+                    pattern=patterns[i],
+                    plan=plan,
+                    variant=variant,
+                    name=name_of(i, patterns[i]),
+                    prepare_s=dom_s + (time.perf_counter() - t1),
+                )
+        assert all(q is not None for q in out)
+        return out  # type: ignore[return-value]
+
+    # targets whose device-resident domain arrays stay cached; adjacency
+    # bitmaps dominate the footprint, so keep only a few (FIFO-evicted).
+    _DOM_TARGET_CACHE = 4
+
+    def _target_domain_arrays(self, index: SubgraphIndex) -> dom_mod.TargetDomainArrays:
+        """Device-resident target arrays for domain preprocessing, built
+        once per index and cached (bounded) on the session.  The cache
+        entry pins the PackedGraph so its id() cannot be recycled."""
+        key = id(index.packed)
+        hit = self._dom_targets.get(key)
+        if hit is not None:
+            return hit[1]
+        arrays = dom_mod.target_domain_arrays(index.packed)
+        while len(self._dom_targets) >= self._DOM_TARGET_CACHE:
+            self._dom_targets.pop(next(iter(self._dom_targets)))
+        self._dom_targets[key] = (index.packed, arrays)
+        return arrays
+
+    def _domain_fn(
+        self, flags: Dict[str, bool], b_pad: int, p_pad: int, a_pad: int,
+        l_pad: int, index: SubgraphIndex,
+    ) -> Callable:
+        """The jitted batched domain fixpoint for one shape bucket, keyed
+        into the session compile cache (kind='domains')."""
+        pallas_mode = "per-arc" if self.config.use_pallas else "off"
+        key = (
+            "domains", flags["use_ac"], flags["use_fc"], flags["interleave"],
+            pallas_mode, b_pad, p_pad, a_pad, l_pad,
+            index.n, index.w, index.n_edge_labels,
+        )
+        fn = self._engines.get(key)
+        if fn is not None:
+            self.cache_hits += 1
+            return fn
+        self.compiles += 1
+        fn = dom_mod.device_fixpoint(
+            use_ac=flags["use_ac"], use_fc=flags["use_fc"],
+            interleave=flags["interleave"], pallas_mode=pallas_mode,
+            batched=True,
+        )
+        self._engines[key] = fn
+        return fn
+
     def _coerce(self, q: Union[Query, Graph]) -> Query:
         return q if isinstance(q, Query) else self.prepare(q)
+
+    def _coerce_all(self, queries: Iterable[Union[Query, Graph]]) -> List[Query]:
+        """Coerce a mixed Query/Graph sequence; raw patterns go through the
+        batched device preprocessing path in one sweep."""
+        qs = list(queries)
+        todo = [i for i, q in enumerate(qs) if not isinstance(q, Query)]
+        if todo:
+            prepared = self.prepare_batch([qs[i] for i in todo])
+            for i, q in zip(todo, prepared):
+                qs[i] = q
+        return qs  # type: ignore[return-value]
 
     # -- execution: single -------------------------------------------------
 
@@ -393,7 +574,7 @@ class Enumerator:
         its per-query results immediately.  ``MatchSet.query_index`` carries
         the position in the input sequence.
         """
-        qs: List[Query] = [self._coerce(q) for q in queries]
+        qs: List[Query] = self._coerce_all(queries)
         cfg = self.config
 
         if self.mesh is not None:

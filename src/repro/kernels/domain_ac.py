@@ -1,16 +1,27 @@
-"""Pallas TPU kernel for RI-DS arc-consistency filtering.
+"""Pallas TPU kernels for RI-DS arc-consistency filtering (DESIGN.md §5).
 
-One AC sweep for a single constraint arc ``(p, q, dir, label)`` tests, for
+One AC test for a single constraint arc ``(p, q, dir, label)`` asks, for
 every target node ``t``, whether ``adj_rows[t] ∧ D(q)`` has any set bit —
 a ``[n_t, w]`` bitmap AND against a broadcast ``[w]`` mask followed by a
 per-row any-reduce.  This is the SDDMM-shaped part of domain preprocessing
 (DESIGN.md §2): dense rows stream from HBM once, the mask stays resident in
 VMEM.
 
-TPU mapping: grid over row tiles of ``tr`` rows; block ``(tr, w)`` of
-adjacency rows, mask block ``(1, w)`` pinned (same index every step), output
-``(tr, 1)`` int32 flags.  ``w`` padded to 128-word lanes, ``tr`` a multiple
-of 8 sublanes.
+Two granularities:
+
+* :func:`adjacency_any` — one arc.  Grid over row tiles of ``tr`` rows;
+  block ``(tr, w)`` of adjacency rows, mask block ``(1, w)`` pinned (same
+  index every step), output ``(tr, 1)`` int32 flags.  ``w`` padded to
+  128-word lanes, ``tr`` a multiple of 8 sublanes.  Composes with ``vmap``
+  (plain BlockSpecs), which is what the batched domain engine uses.
+* :func:`arc_any_sweep` — **all arcs of one AC sweep in a single
+  ``pallas_call``**.  Grid ``(n_arcs, row tiles)``; the adjacency operand's
+  ``index_map`` reads the scalar-prefetched ``arc_row`` table to pick which
+  ``(label, dir)`` plane the pipeline DMAs next — the same
+  pointer-chasing-by-prefetch trick as `candidate_mask`.  Used by the
+  single-query device fixpoint (`repro.core.domains.device_fixpoint`); the
+  scalar-prefetch grid spec has no vmap rule, so the batched path falls
+  back to per-arc kernels.
 """
 
 from __future__ import annotations
@@ -20,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.candidate_mask import pad_words
 
@@ -58,3 +70,57 @@ def adjacency_any(
         interpret=interpret,
     )(rows_p, mask_p)
     return out[:n_t, 0]
+
+
+def _sweep_kernel(arc_row_ref, adj_ref, mask_ref, out_ref):
+    hit = (adj_ref[0] & mask_ref[...]) != 0  # [tr, w] & [1, w] -> [tr, w]
+    out_ref[...] = jnp.any(hit, axis=-1)[None, :].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile"))
+def arc_any_sweep(
+    adj_flat: jnp.ndarray,  # [n_planes, n_t, w] uint32 (label-major planes)
+    arc_row: jnp.ndarray,  # [n_arcs] int32 plane index per arc
+    masks: jnp.ndarray,  # [n_arcs, w] uint32 (D(q) bitmap per arc)
+    interpret: bool = True,
+    row_tile: int = ROW_TILE,
+) -> jnp.ndarray:
+    """All arcs of one AC sweep in one kernel call.
+
+    ``out[a, t] = any(adj_flat[arc_row[a], t] ∧ masks[a])`` — ``[n_arcs,
+    n_t]`` int32 {0, 1}.  The adjacency plane per grid step is chosen by the
+    scalar-prefetched ``arc_row`` table, so the DMA engine chases the arc
+    table while the VPU reduces the previous tile.
+    """
+    n_arcs, w = masks.shape
+    n_t = adj_flat.shape[1]
+    wp = pad_words(w)
+    tr = min(row_tile, max(8, ((n_t + 7) // 8) * 8))
+    n_pad = ((n_t + tr - 1) // tr) * tr
+    adj_p = jnp.pad(adj_flat, ((0, 0), (0, n_pad - n_t), (0, wp - w)))
+    masks_p = jnp.pad(masks, ((0, 0), (0, wp - w)))
+
+    def adj_map(a, i, arc_row_s):
+        return (arc_row_s[a], i, 0)
+
+    def mask_map(a, i, arc_row_s):
+        return (a, 0)
+
+    def out_map(a, i, arc_row_s):
+        return (a, i)
+
+    out = pl.pallas_call(
+        _sweep_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_arcs, n_pad // tr),
+            in_specs=[
+                pl.BlockSpec((1, tr, wp), adj_map),
+                pl.BlockSpec((1, wp), mask_map),
+            ],
+            out_specs=pl.BlockSpec((1, tr), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_arcs, n_pad), jnp.int32),
+        interpret=interpret,
+    )(arc_row.astype(jnp.int32), adj_p, masks_p)
+    return out[:, :n_t]

@@ -30,6 +30,12 @@ def adjacency_any(rows, mask, interpret=None):
     return _ac.adjacency_any(rows, mask, interpret=it)
 
 
+def arc_any_sweep(adj_flat, arc_row, masks, interpret=None):
+    """See `repro.kernels.domain_ac.arc_any_sweep`."""
+    it = INTERPRET if interpret is None else interpret
+    return _ac.arc_any_sweep(adj_flat, arc_row, masks, interpret=it)
+
+
 def popcount_rows(bits, interpret=None):
     """See `repro.kernels.popcount_reduce.popcount_rows`."""
     it = INTERPRET if interpret is None else interpret

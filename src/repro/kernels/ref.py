@@ -38,6 +38,22 @@ def adjacency_any_ref(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.any((rows & mask[None, :]) != 0, axis=-1).astype(jnp.int32)
 
 
+def arc_any_sweep_ref(
+    adj_flat: jnp.ndarray,  # [n_planes, n_t, w] uint32
+    arc_row: jnp.ndarray,  # [n_arcs] int32
+    masks: jnp.ndarray,  # [n_arcs, w] uint32
+) -> jnp.ndarray:
+    """All arcs of one AC sweep: ``out[a, t] = any(adj_flat[arc_row[a], t] ∧
+    masks[a])`` — the oracle for `repro.kernels.domain_ac.arc_any_sweep`.
+    Sequential over arcs (``lax.map``) to avoid materializing the
+    ``[n_arcs, n_t, w]`` gather."""
+    def one(x):
+        r, m = x
+        return adjacency_any_ref(adj_flat[r], m)
+
+    return lax.map(one, (arc_row, masks))
+
+
 def popcount_rows_ref(bits: jnp.ndarray) -> jnp.ndarray:
     """Per-row popcount of ``[n, w]`` uint32 bitmaps -> ``[n]`` int32."""
     return jnp.sum(lax.population_count(bits), axis=-1).astype(jnp.int32)

@@ -12,7 +12,10 @@ import pytest
 from repro.core.graph import Graph
 
 
-def random_graph(rng, n, m, n_labels=1, n_elabs=1, undirected=True) -> Graph:
+def random_graph(rng, n, m, n_labels=1, n_elabs=1, undirected=True,
+                 selfloops=0) -> Graph:
+    """Random labeled graph; ``selfloops`` adds that many loop edges ``(u, u)``
+    on distinct nodes (patterns extracted from the graph inherit them)."""
     edges = set()
     tries = 0
     while len(edges) < m and tries < 40 * m:
@@ -24,6 +27,9 @@ def random_graph(rng, n, m, n_labels=1, n_elabs=1, undirected=True) -> Graph:
             continue
         edges.add((int(u), int(v)))
     edges = sorted(edges)
+    if selfloops:
+        for u in rng.choice(n, size=min(selfloops, n), replace=False):
+            edges.append((int(u), int(u)))
     return Graph.from_edges(
         n,
         edges,
@@ -31,6 +37,14 @@ def random_graph(rng, n, m, n_labels=1, n_elabs=1, undirected=True) -> Graph:
         edge_labels=rng.integers(0, n_elabs, len(edges)),
         undirected=undirected,
     )
+
+
+def bump_edge_label(g: Graph, edge_idx: int, new_label: int) -> Graph:
+    """Copy of ``g`` with one edge's label replaced — used to produce
+    patterns whose edge label is out of the target's label range."""
+    elabs = g.edge_labels.copy()
+    elabs[edge_idx] = new_label
+    return Graph(n=g.n, src=g.src, dst=g.dst, labels=g.labels, edge_labels=elabs)
 
 
 def extract_connected_pattern(rng, g: Graph, n_nodes: int) -> Graph:

@@ -14,7 +14,12 @@ from repro.core import domains as dom_mod
 from repro.core import ordering as ord_mod
 from repro.core.graph import Graph, PackedGraph, bitmap_to_indices, popcount
 from repro.core.ref import ref_enumerate
-from tests.conftest import extract_connected_pattern, random_graph
+from tests.conftest import bump_edge_label, extract_connected_pattern, random_graph
+
+# (use_ac, use_fc, interleave) triples covering all pipeline modes incl. the
+# AC ⇄ FC joint fixpoint (variant ri-ds-si-acfc)
+PIPELINES = [(False, False, False), (True, False, False), (True, True, False),
+             (True, True, True)]
 
 
 def all_matches(pattern, target):
@@ -34,17 +39,19 @@ def all_matches(pattern, target):
 
 
 @settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_domain_pipeline_soundness(seed):
+@given(seed=st.integers(0, 10_000), selfloops=st.integers(0, 3))
+def test_domain_pipeline_soundness(seed, selfloops):
     rng = np.random.default_rng(seed)
-    tgt = random_graph(rng, 12, 26, n_labels=2)
+    tgt = random_graph(rng, 12, 26, n_labels=2, selfloops=selfloops)
     pat = extract_connected_pattern(rng, tgt, 3)
     if pat.m == 0:
         return
     packed = PackedGraph.from_graph(tgt)
     matches = all_matches(pat, tgt)
-    for use_ac, use_fc in [(False, False), (True, False), (True, True)]:
-        res = dom_mod.compute_domains(pat, packed, use_ac=use_ac, use_fc=use_fc)
+    for use_ac, use_fc, interleave in PIPELINES:
+        res = dom_mod.compute_domains(
+            pat, packed, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+        )
         if matches:
             assert res.satisfiable
             for m in matches:
@@ -52,7 +59,7 @@ def test_domain_pipeline_soundness(seed):
                     dom = set(bitmap_to_indices(res.bits[p]).tolist())
                     assert t in dom, (
                         f"pruning removed true-match node {t} from D({p}) "
-                        f"(ac={use_ac}, fc={use_fc})"
+                        f"(ac={use_ac}, fc={use_fc}, acfc={interleave})"
                     )
 
 
@@ -130,3 +137,112 @@ def test_singleton_first_placement():
         pat, domain_sizes=sizes, singleton_first=True
     )
     assert ordering.order[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# device engine == numpy oracle (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    selfloops=st.integers(0, 3),
+    n_elabs=st.integers(1, 2),
+    overflow=st.booleans(),
+)
+def test_device_fixpoint_matches_numpy(seed, selfloops, n_elabs, overflow):
+    """The jitted fixpoint engine must be bit-identical to the numpy oracle
+    for every pipeline mode, including self-loops and overflow labels."""
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, 12, 24, n_labels=2, n_elabs=n_elabs,
+                       selfloops=selfloops)
+    pat = extract_connected_pattern(rng, tgt, 3)
+    if pat.m == 0:
+        return
+    if overflow:
+        pat = bump_edge_label(pat, int(rng.integers(pat.m)), n_elabs + 3)
+    packed = PackedGraph.from_graph(tgt)
+    for use_ac, use_fc, interleave in PIPELINES:
+        a = dom_mod.compute_domains(
+            pat, packed, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+        )
+        b = dom_mod.compute_domains_device(
+            pat, packed, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+        )
+        assert a.satisfiable == b.satisfiable, (use_ac, use_fc, interleave)
+        np.testing.assert_array_equal(a.bits, b.bits)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_device_batch_matches_numpy(seed):
+    """One vmapped call over a padded pattern batch == per-query oracle."""
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, 14, 30, n_labels=2, selfloops=2)
+    pats = []
+    while len(pats) < 5:
+        p = extract_connected_pattern(rng, tgt, int(rng.integers(2, 5)))
+        if p.m:
+            pats.append(p)
+    packed = PackedGraph.from_graph(tgt)
+    outs = dom_mod.compute_domains_batch(
+        pats, packed, use_ac=True, use_fc=True, interleave=True, batch_pad=8
+    )
+    for p, o in zip(pats, outs):
+        a = dom_mod.compute_domains(p, packed, use_ac=True, use_fc=True,
+                                    interleave=True)
+        assert a.satisfiable == o.satisfiable
+        np.testing.assert_array_equal(a.bits, o.bits)
+
+
+# ---------------------------------------------------------------------------
+# AC ⇄ FC joint fixpoint: never coarser than AC → FC
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), selfloops=st.integers(0, 2))
+def test_acfc_domains_subset_of_ac_fc(seed, selfloops):
+    """Joint-fixpoint domains are a subset of the sequential AC → FC pass
+    (never larger — the paper's 'reachable prunings left on the table')."""
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, 12, 26, n_labels=2, selfloops=selfloops)
+    pat = extract_connected_pattern(rng, tgt, 4)
+    if pat.m == 0:
+        return
+    packed = PackedGraph.from_graph(tgt)
+    seq = dom_mod.compute_domains(pat, packed, use_ac=True, use_fc=True)
+    joint = dom_mod.compute_domains(pat, packed, use_ac=True, use_fc=True,
+                                    interleave=True)
+    if not seq.satisfiable:
+        assert not joint.satisfiable
+        return
+    if joint.satisfiable:
+        assert not np.any(joint.bits & ~seq.bits)  # subset, bitwise
+        assert popcount(joint.bits).sum() <= popcount(seq.bits).sum()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), selfloops=st.integers(0, 2))
+def test_acfc_states_never_increase(seed, selfloops):
+    """Search states explored under ri-ds-si-acfc never exceed ri-ds-si-fc
+    (for the same node ordering), and matches are always identical.
+
+    When the tighter acfc domains flip the SI ordering tie-break the search
+    trees are not comparable position-by-position, so the state bound is
+    asserted only when both variants pick the same ordering (the common
+    case); match-count equality is unconditional."""
+    from repro.core.plan import build_plan
+
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, 12, 26, n_labels=2, selfloops=selfloops)
+    pat = extract_connected_pattern(rng, tgt, 4)
+    if pat.m == 0:
+        return
+    fc = ref_enumerate(pat, tgt, variant="ri-ds-si-fc")
+    acfc = ref_enumerate(pat, tgt, variant="ri-ds-si-acfc")
+    assert acfc.matches == fc.matches
+    packed = PackedGraph.from_graph(tgt)
+    p_fc = build_plan(pat, packed, variant="ri-ds-si-fc")
+    p_acfc = build_plan(pat, packed, variant="ri-ds-si-acfc")
+    if p_fc.order.tolist() == p_acfc.order.tolist():
+        assert acfc.states <= fc.states

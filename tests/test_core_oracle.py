@@ -10,8 +10,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EngineConfig, PackedGraph, enumerate_subgraphs
+from repro.core.graph import Graph
 from repro.core.ref import brute_force_count, ref_enumerate
-from tests.conftest import extract_connected_pattern, random_graph
+from tests.conftest import bump_edge_label, extract_connected_pattern, random_graph
 
 
 @settings(max_examples=25, deadline=None)
@@ -23,11 +24,14 @@ from tests.conftest import extract_connected_pattern, random_graph
     n_elabs=st.integers(1, 2),
     undirected=st.booleans(),
     pat_nodes=st.integers(2, 4),
-    variant=st.sampled_from(["ri", "ri-ds-si-fc"]),
+    selfloops=st.integers(0, 3),
+    variant=st.sampled_from(["ri", "ri-ds-si-fc", "ri-ds-si-acfc"]),
 )
-def test_engine_matches_oracle(seed, n, density, n_labels, n_elabs, undirected, pat_nodes, variant):
+def test_engine_matches_oracle(seed, n, density, n_labels, n_elabs, undirected,
+                               pat_nodes, selfloops, variant):
     rng = np.random.default_rng(seed)
-    tgt = random_graph(rng, n, int(n * density), n_labels, n_elabs, undirected)
+    tgt = random_graph(rng, n, int(n * density), n_labels, n_elabs, undirected,
+                       selfloops=selfloops)
     pat = extract_connected_pattern(rng, tgt, pat_nodes)
     if pat.m == 0:
         return
@@ -43,19 +47,29 @@ def test_engine_matches_oracle(seed, n, density, n_labels, n_elabs, undirected, 
     seed=st.integers(0, 10_000),
     n=st.integers(4, 7),
     pat_nodes=st.integers(2, 3),
+    selfloops=st.integers(0, 2),
+    overflow=st.booleans(),
 )
-def test_brute_force_agreement(seed, n, pat_nodes):
+def test_brute_force_agreement(seed, n, pat_nodes, selfloops, overflow):
     rng = np.random.default_rng(seed)
-    tgt = random_graph(rng, n, n + 2, n_labels=2)
+    tgt = random_graph(rng, n, n + 2, n_labels=2, selfloops=selfloops)
     pat = extract_connected_pattern(rng, tgt, pat_nodes)
     if pat.m == 0:
         return
+    if overflow:
+        # out-of-range edge label: zero matches everywhere, never an error
+        pat = bump_edge_label(pat, int(rng.integers(pat.m)), 5)
     bf = brute_force_count(pat, tgt)
-    for variant in ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc"):
+    for variant in ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc", "ri-ds-si-acfc"):
         ref = ref_enumerate(pat, tgt, variant=variant)
         assert ref.matches == bf, variant
         res = enumerate_subgraphs(pat, tgt, variant=variant, n_workers=2, expand_width=2)
         assert res.matches == bf, variant
+
+
+# The deterministic self-loop / overflow regression tests live in
+# tests/test_domains_bugfixes.py (no hypothesis dependency, so they run
+# even where hypothesis is absent); this module keeps the property tests.
 
 
 def test_worker_config_invariance(rng):

@@ -1,0 +1,250 @@
+"""Deterministic regression tests for the preprocessing bugfixes and the
+device-resident domain engine (DESIGN.md §5) — no hypothesis dependency, so
+they run even where hypothesis is absent (the property-test versions live in
+test_core_domains.py / test_core_oracle.py).
+
+Covers:
+  * self-loop constraints enforced end-to-end (they used to be dropped:
+    `_pattern_arcs` skips ``u == v`` and parent tables cannot express them);
+  * pattern edge labels outside the target's range -> unsatisfiable, never
+    IndexError / silently-clamped gathers;
+  * the DomainResult invariant: unsatisfiable => all-zero bits;
+  * device fixpoint engine == numpy oracle, bit for bit, on a fixed-seed
+    corpus (single, batched, and Pallas-interpret paths).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, enumerate_subgraphs
+from repro.core import domains as dom_mod
+from repro.core.graph import Graph, PackedGraph, bitmap_to_indices, popcount
+from repro.core.ref import brute_force_count, ref_enumerate
+from tests.conftest import bump_edge_label, extract_connected_pattern, random_graph
+
+# (use_ac, use_fc, interleave) triples covering all pipeline modes incl. the
+# AC ⇄ FC joint fixpoint (variant ri-ds-si-acfc)
+PIPELINES = [(False, False, False), (True, False, False), (True, True, False),
+             (True, True, True)]
+
+
+# ---------------------------------------------------------------------------
+# self-loop enforcement
+# ---------------------------------------------------------------------------
+
+def test_selfloop_restricts_initial_domains():
+    """A pattern node with a self-loop may only map to target nodes that
+    carry a same-label self-loop (previously unenforced end-to-end)."""
+    # target: triangle, self-loop only on node 0
+    tgt = Graph.from_edges(3, [(0, 1), (1, 2), (2, 0), (0, 0)], undirected=True)
+    pat = Graph.from_edges(2, [(0, 1), (0, 0)], undirected=True)
+    packed = PackedGraph.from_graph(tgt)
+    bits = dom_mod.initial_domains(pat, packed)
+    assert bitmap_to_indices(bits[0]).tolist() == [0]  # loop node -> node 0 only
+    assert len(bitmap_to_indices(bits[1])) == 3
+
+
+def test_selfloop_label_must_match():
+    tgt = Graph.from_edges(2, [(0, 1), (0, 0)], edge_labels=[0, 1],
+                           undirected=True)
+    packed = PackedGraph.from_graph(tgt)
+    # pattern self-loop with label 0: target's loop has label 1 -> empty
+    pat = Graph.from_edges(1, [(0, 0)], edge_labels=[0], undirected=True)
+    res = dom_mod.compute_domains(pat, packed, use_ac=False)
+    assert not res.satisfiable
+    # same label 1 -> node 0
+    pat1 = Graph.from_edges(1, [(0, 0)], edge_labels=[1], undirected=True)
+    res1 = dom_mod.compute_domains(pat1, packed, use_ac=False)
+    assert res1.satisfiable
+    assert bitmap_to_indices(res1.bits[0]).tolist() == [0]
+
+
+def test_selfloop_brute_force_agreement():
+    """Self-loop constraints end-to-end (this silently disagreed with brute
+    force before the fix: loop edges were dropped by preprocessing).
+
+    Target: a triangle where only node 0 carries a self-loop; pattern: an
+    edge whose first endpoint has a self-loop.  Only mappings placing the
+    loop node on target node 0 survive.
+    """
+    tgt = Graph.from_edges(3, [(0, 1), (1, 2), (2, 0), (0, 0)], undirected=True)
+    pat = Graph.from_edges(2, [(0, 1), (0, 0)], undirected=True)
+    bf = brute_force_count(pat, tgt)
+    assert bf == 2  # loop node -> 0, other endpoint -> 1 or 2
+    for variant in ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc", "ri-ds-si-acfc"):
+        ref = ref_enumerate(pat, tgt, variant=variant)
+        assert ref.matches == bf, variant
+        res = enumerate_subgraphs(pat, tgt, variant=variant, n_workers=2,
+                                  expand_width=2)
+        assert res.matches == bf, variant
+
+
+def test_selfloop_label_mismatch_no_match():
+    """A pattern self-loop whose label differs from the target's loop label
+    must not match (labels checked, not just loop presence)."""
+    tgt = Graph.from_edges(2, [(0, 1), (0, 0)], edge_labels=[0, 1],
+                           undirected=True)
+    pat = Graph.from_edges(2, [(0, 1), (0, 0)], edge_labels=[0, 0],
+                           undirected=True)
+    assert brute_force_count(pat, tgt) == 0
+    res = enumerate_subgraphs(pat, tgt, variant="ri-ds-si-fc")
+    assert res.matches == 0
+
+
+def test_selfloop_random_corpus_brute_force():
+    """Fixed-seed sweep: self-loop-bearing patterns agree with brute force
+    through every variant."""
+    checked = 0
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        tgt = random_graph(rng, 6, 8, n_labels=2, selfloops=2)
+        pat = extract_connected_pattern(rng, tgt, 3)
+        if pat.m == 0 or not np.any(pat.src == pat.dst):
+            continue
+        bf = brute_force_count(pat, tgt)
+        for variant in ("ri", "ri-ds-si-fc", "ri-ds-si-acfc"):
+            assert ref_enumerate(pat, tgt, variant=variant).matches == bf
+            res = enumerate_subgraphs(pat, tgt, variant=variant, n_workers=2,
+                                      expand_width=2)
+            assert res.matches == bf
+        checked += 1
+    assert checked >= 2  # the sweep must actually exercise loop patterns
+
+
+# ---------------------------------------------------------------------------
+# label overflow + stale bits
+# ---------------------------------------------------------------------------
+
+def test_label_overflow_is_unsat_not_indexerror():
+    """A pattern edge label outside the target's range must yield
+    satisfiable=False in every pipeline mode (it used to IndexError)."""
+    tgt = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3)], undirected=True)
+    packed = PackedGraph.from_graph(tgt)
+    pat = bump_edge_label(Graph.from_edges(2, [(0, 1)], undirected=True), 0, 7)
+    for use_ac, use_fc, interleave in PIPELINES:
+        res = dom_mod.compute_domains(
+            pat, packed, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+        )
+        assert not res.satisfiable
+        assert not res.bits.any()
+    # overflow self-loop label too
+    loop = Graph.from_edges(1, [(0, 0)], edge_labels=[9], undirected=True)
+    res = dom_mod.compute_domains(loop, packed, use_ac=False)
+    assert not res.satisfiable and not res.bits.any()
+    # end to end: zero matches, no crash, in every variant
+    for variant in ("ri", "ri-ds", "ri-ds-si-fc", "ri-ds-si-acfc"):
+        assert ref_enumerate(pat, tgt, variant=variant).matches == 0
+        assert enumerate_subgraphs(pat, tgt, variant=variant).matches == 0
+
+
+def test_unsat_results_have_zeroed_bits():
+    """DomainResult invariant: satisfiable=False => all-zero bits (early
+    unsat exits used to leak partially filtered bitmaps)."""
+    # FC collision
+    bits = np.zeros((2, 1), dtype=np.uint32)
+    bits[0, 0] = 0b01
+    bits[1, 0] = 0b01
+    res = dom_mod.forward_check_singletons(bits)
+    assert not res.satisfiable and not res.bits.any()
+    # AC-driven emptying: star pattern needs a degree-3 hub, path target
+    # has none beyond label/degree compat
+    tgt = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3)], undirected=True)
+    pat = Graph.from_edges(4, [(0, 1), (0, 2), (0, 3)], undirected=True)
+    packed = PackedGraph.from_graph(tgt)
+    res = dom_mod.compute_domains(pat, packed, use_ac=True)
+    assert not res.satisfiable and not res.bits.any()
+
+
+# ---------------------------------------------------------------------------
+# device engine == numpy oracle, fixed-seed corpus
+# ---------------------------------------------------------------------------
+
+def test_device_fixpoint_matches_numpy_fixed_seeds():
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        tgt = random_graph(rng, 12, 24, n_labels=2, n_elabs=2,
+                           selfloops=seed % 3)
+        pat = extract_connected_pattern(rng, tgt, 3)
+        if pat.m == 0:
+            continue
+        if seed % 2:
+            pat = bump_edge_label(pat, int(rng.integers(pat.m)), 5)
+        packed = PackedGraph.from_graph(tgt)
+        for use_ac, use_fc, interleave in PIPELINES:
+            a = dom_mod.compute_domains(
+                pat, packed, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+            )
+            b = dom_mod.compute_domains_device(
+                pat, packed, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+            )
+            assert a.satisfiable == b.satisfiable, (seed, use_ac, use_fc, interleave)
+            np.testing.assert_array_equal(a.bits, b.bits)
+
+
+def test_device_batch_matches_numpy_fixed_seed():
+    rng = np.random.default_rng(1)
+    tgt = random_graph(rng, 14, 30, n_labels=2, selfloops=2)
+    pats = []
+    while len(pats) < 5:
+        p = extract_connected_pattern(rng, tgt, int(rng.integers(2, 5)))
+        if p.m:
+            pats.append(p)
+    packed = PackedGraph.from_graph(tgt)
+    outs = dom_mod.compute_domains_batch(
+        pats, packed, use_ac=True, use_fc=True, interleave=True, batch_pad=8
+    )
+    for p, o in zip(pats, outs):
+        a = dom_mod.compute_domains(p, packed, use_ac=True, use_fc=True,
+                                    interleave=True)
+        assert a.satisfiable == o.satisfiable
+        np.testing.assert_array_equal(a.bits, o.bits)
+
+
+def test_device_pallas_interpret_matches_numpy(rng):
+    """use_pallas routes the sweep through the Pallas kernels (interpret
+    mode on CPU) — same bits on both the single-query (scalar-prefetch
+    sweep kernel) and batched (per-arc kernels) paths."""
+    tgt = random_graph(rng, 10, 20, n_labels=2, selfloops=1)
+    pat = extract_connected_pattern(rng, tgt, 3)
+    if pat.m == 0:
+        pytest.skip("empty pattern")
+    packed = PackedGraph.from_graph(tgt)
+    a = dom_mod.compute_domains(pat, packed, use_ac=True, use_fc=True,
+                                interleave=True)
+    b = dom_mod.compute_domains_device(pat, packed, use_ac=True, use_fc=True,
+                                       interleave=True, use_pallas=True)
+    assert a.satisfiable == b.satisfiable
+    np.testing.assert_array_equal(a.bits, b.bits)
+    outs = dom_mod.compute_domains_batch(
+        [pat, pat], packed, use_ac=True, use_fc=True, interleave=True,
+        use_pallas=True,
+    )
+    for o in outs:
+        np.testing.assert_array_equal(a.bits, o.bits)
+
+
+def test_acfc_subset_and_states_fixed_seed():
+    """Joint AC ⇄ FC fixpoint: domains ⊆ sequential AC → FC, matches equal,
+    states never larger under the same ordering."""
+    from repro.core.plan import build_plan
+
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        tgt = random_graph(rng, 12, 26, n_labels=2, selfloops=seed % 2)
+        pat = extract_connected_pattern(rng, tgt, 4)
+        if pat.m == 0:
+            continue
+        packed = PackedGraph.from_graph(tgt)
+        seq = dom_mod.compute_domains(pat, packed, use_ac=True, use_fc=True)
+        joint = dom_mod.compute_domains(pat, packed, use_ac=True, use_fc=True,
+                                        interleave=True)
+        if seq.satisfiable and joint.satisfiable:
+            assert not np.any(joint.bits & ~seq.bits)
+            assert popcount(joint.bits).sum() <= popcount(seq.bits).sum()
+        fc = ref_enumerate(pat, tgt, variant="ri-ds-si-fc")
+        acfc = ref_enumerate(pat, tgt, variant="ri-ds-si-acfc")
+        assert acfc.matches == fc.matches
+        p_fc = build_plan(pat, packed, variant="ri-ds-si-fc")
+        p_acfc = build_plan(pat, packed, variant="ri-ds-si-acfc")
+        if p_fc.order.tolist() == p_acfc.order.tolist():
+            assert acfc.states <= fc.states

@@ -59,6 +59,23 @@ def test_adjacency_any_and_popcount(rng, n, w):
     )
 
 
+@pytest.mark.parametrize(
+    "n_planes,n_t,w,n_arcs",
+    [(2, 1, 1, 1), (4, 10, 3, 6), (2, 300, 5, 16), (6, 257, 129, 9)],
+)
+def test_arc_any_sweep(rng, n_planes, n_t, w, n_arcs):
+    """The whole-sweep scalar-prefetch kernel (one AC sweep's arcs in one
+    pallas_call) against the lax.map oracle."""
+    adj = rng.integers(0, 2**32, (n_planes, n_t, w), dtype=np.uint32)
+    arc_row = rng.integers(0, n_planes, n_arcs).astype(np.int32)
+    masks = rng.integers(0, 2**32, (n_arcs, w), dtype=np.uint32)
+    got = ops.arc_any_sweep(jnp.asarray(adj), jnp.asarray(arc_row),
+                            jnp.asarray(masks))
+    want = kref.arc_any_sweep_ref(jnp.asarray(adj), jnp.asarray(arc_row),
+                                  jnp.asarray(masks))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_pack_bits_roundtrip(rng):
     n, w = 70, 3
     flags = rng.integers(0, 2, n).astype(np.int32)

@@ -124,6 +124,55 @@ def test_matchset_lazy_mappings(rng):
     assert ms.mappings() is maps  # cached
 
 
+def test_prepare_batch_matches_per_query_prepare(rng):
+    """Batched device domain preprocessing (one vmapped fixpoint call per
+    shape bucket) must produce plans identical to per-query numpy prepare,
+    and key its jitted fixpoints into the session compile cache."""
+    tgt, pats = _corpus(rng, n_pats=8)
+    index = SubgraphIndex.build(tgt)
+    dev = Enumerator(index, config=CFG)  # domain_backend='device' default
+    host = Enumerator(index, config=CFG, domain_backend="numpy")
+
+    qs_dev = dev.prepare_batch(pats, names=[f"q{i}" for i in range(len(pats))])
+    qs_host = [host.prepare(p) for p in pats]
+    assert [q.name for q in qs_dev] == [f"q{i}" for i in range(len(pats))]
+    for a, b in zip(qs_dev, qs_host):
+        np.testing.assert_array_equal(a.plan.dom_bits, b.plan.dom_bits)
+        assert a.plan.satisfiable == b.plan.satisfiable
+        assert a.plan.order.tolist() == b.plan.order.tolist()
+    # domain fixpoints live in the same compile cache ('domains' entries)
+    info = dev.cache_info()
+    assert info["compiles"] >= 1
+    # a second same-bucket batch is all cache hits, no new compiles
+    before = dev.cache_info()["compiles"]
+    dev.prepare_batch(pats)
+    assert dev.cache_info()["compiles"] == before
+
+    # raw Graphs through run_batch route through prepare_batch and agree
+    res_dev = dev.run_batch(pats, pack_size=3)
+    res_host = host.run_batch(qs_host, pack_size=3)
+    assert [(m.matches, m.states) for m in res_dev] == [
+        (m.matches, m.states) for m in res_host
+    ]
+
+
+def test_prepare_batch_selfloops_and_unsat(rng):
+    """Self-loop patterns and unsatisfiable (overflow-label) patterns keep
+    their order and results through the batched path."""
+    tgt = random_graph(rng, 20, 50, n_labels=2, selfloops=3)
+    index = SubgraphIndex.build(tgt)
+    session = Enumerator(index, config=CFG)
+    good = extract_connected_pattern(rng, tgt, 3)
+    if good.m == 0:
+        pytest.skip("empty pattern")
+    from tests.conftest import bump_edge_label
+
+    bad = bump_edge_label(good, 0, 9)  # label overflow: unsatisfiable
+    results = session.run_batch([good, bad, good], pack_size=2)
+    assert results[0].matches == results[2].matches >= 1
+    assert results[1].matches == 0
+
+
 def test_index_picklable_and_reusable(rng):
     tgt, pats = _corpus(rng, n_pats=1)
     index = SubgraphIndex.build(tgt)
