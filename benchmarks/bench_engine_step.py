@@ -1,0 +1,184 @@
+"""Engine-step backend benchmark: loose-ops jnp step vs fused Pallas
+extend-step kernel (DESIGN.md §6).
+
+  PYTHONPATH=src python benchmarks/bench_engine_step.py [--smoke]
+
+Runs a ppis32-like collection through a ≥ 32-worker session twice — once
+per ``EngineConfig.step_backend`` — and checks the two claims the backend
+seam makes:
+
+* **bit-identity** (always asserted): matches, states, steps, and steals
+  agree query-for-query between the ``jnp`` and ``pallas`` backends.  Off
+  TPU the fused kernel runs in *interpret mode* (Python kernel body —
+  ~10-100× slower than jnp; see API.md), so the identity sweep runs on the
+  smallest-states slice of the corpus there, the full corpus on TPU.
+* **speedup** (asserted in compiled mode only): the fused step must beat
+  the loose-ops step by ≥ 1.5× wall-clock.  Interpret mode is exempt by
+  construction — it validates semantics, not speed — so on CPU the ratio
+  is only reported.
+
+Emits CSV rows (name, us_per_state, derived) and a JSON artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+try:
+    from benchmarks import common
+except ImportError:  # executed from an arbitrary cwd
+    import repro.bench  # noqa: F401  (puts the repo root on sys.path)
+    from benchmarks import common
+
+from repro.core import EngineConfig, Enumerator, SubgraphIndex
+from repro.data import graphgen
+from repro.kernels import ops as kops
+
+SPEEDUP_FLOOR = 1.5  # compiled-mode acceptance (interpret exempt)
+# interpret mode: only identity-check queries up to this many (jnp-counted)
+# search states, so the Python kernel body finishes in CI time
+INTERPRET_STATE_BUDGET = 60_000
+
+
+def _corpus(smoke: bool, scale: float, seed: int):
+    if smoke:
+        return graphgen.make_collection(
+            "ppis32-like", pattern_edges=(8,), patterns_per_target=1,
+            scale=min(scale, 0.12), seed=seed,
+        )
+    return graphgen.make_collection(
+        "ppis32-like", pattern_edges=(8, 16, 24), patterns_per_target=2,
+        scale=scale, seed=seed,
+    )
+
+
+def _sweep(cfg: EngineConfig, instances, indices, names=None):
+    """Run (a subset of) the collection; returns (per-query dict, wall_s).
+
+    The compile pass is excluded from the timing: each query runs once to
+    warm the session's shape-bucket cache, then once timed — the amortized
+    regime the session API exists for.
+    """
+    session = Enumerator(config=cfg)
+    queries = [
+        session.prepare(inst.pattern, name=inst.name, index=indices[id(inst.target)])
+        for inst in instances
+        if names is None or inst.name in names
+    ]
+    for q in queries:  # warm-up: compile + first execution
+        session.run(q)
+    t0 = time.perf_counter()
+    out = {}
+    for q in queries:
+        ms = session.run(q)
+        out[q.name] = dict(matches=ms.matches, states=ms.states,
+                           steps=ms.steps, steals=ms.steals)
+    return out, time.perf_counter() - t0
+
+
+def run(smoke: bool = False, scale: float = 0.3, workers: int = 32,
+        seed: int = 7) -> dict:
+    assert workers >= 32, "the acceptance criterion is a >=32-worker run"
+    instances = _corpus(smoke, scale, seed)
+    indices: dict = {}
+    for inst in instances:
+        indices.setdefault(id(inst.target), SubgraphIndex.build(inst.target))
+
+    base = EngineConfig(n_workers=workers, expand_width=4)
+    interpret = kops.resolve_interpret(None)
+
+    jnp_res, t_jnp = _sweep(base, instances, indices)
+    total_states = sum(r["states"] for r in jnp_res.values())
+
+    # pick the fused sweep's query set: everything in compiled mode, the
+    # smallest-states prefix under the budget in interpret mode
+    if interpret:
+        by_states = sorted(jnp_res.items(), key=lambda kv: kv[1]["states"])
+        picked, budget = [], INTERPRET_STATE_BUDGET
+        for name, r in by_states:
+            if r["states"] <= budget or not picked:
+                picked.append(name)
+                budget -= r["states"]
+        names = set(picked)
+    else:
+        names = None
+
+    fused_cfg = dataclasses.replace(base, step_backend="pallas")
+    pal_res, t_pal = _sweep(fused_cfg, instances, indices, names=names)
+
+    # --- bit-identity: the seam's core contract ---------------------------
+    for name, r in pal_res.items():
+        assert r == jnp_res[name], (
+            f"{name}: fused step diverged from loose-ops step — "
+            f"pallas={r} jnp={jnp_res[name]}"
+        )
+    checked_states = sum(jnp_res[n]["states"] for n in pal_res)
+
+    # --- speed: compiled mode must win, interpret mode just reports -------
+    # compare on the same query set the fused sweep ran
+    t_jnp_same = t_jnp
+    if names is not None and len(names) < len(jnp_res):
+        _, t_jnp_same = _sweep(base, instances, indices, names=names)
+    speedup = t_jnp_same / max(t_pal, 1e-9)
+    if not interpret:
+        assert speedup >= SPEEDUP_FLOOR, (
+            f"fused extend_step must be >= {SPEEDUP_FLOOR}x the loose-ops "
+            f"step in compiled mode; measured {speedup:.2f}x "
+            f"({t_jnp_same:.3f}s vs {t_pal:.3f}s)"
+        )
+
+    mode = "interpret" if interpret else "compiled"
+    print(common.csv_row(
+        "engine_step/jnp", t_jnp * 1e6 / max(total_states, 1),
+        f"queries={len(jnp_res)};states={total_states};wall={t_jnp:.3f}s",
+    ))
+    print(common.csv_row(
+        f"engine_step/pallas_{mode}", t_pal * 1e6 / max(checked_states, 1),
+        f"queries={len(pal_res)};states={checked_states};wall={t_pal:.3f}s;"
+        f"speedup={speedup:.2f}x;identical=True",
+    ))
+    payload = dict(
+        mode=mode,
+        workers=workers,
+        queries=len(jnp_res),
+        fused_queries=len(pal_res),
+        total_states=total_states,
+        checked_states=checked_states,
+        jnp_wall_s=t_jnp,
+        jnp_wall_same_set_s=t_jnp_same,
+        pallas_wall_s=t_pal,
+        speedup_same_set=speedup,
+        speedup_asserted=not interpret,
+        bit_identical=True,
+    )
+    common.save_json("engine_step", payload)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.3)
+    ap.add_argument("--workers", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus for CI (same assertions)")
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, scale=args.scale, workers=args.workers,
+              seed=args.seed)
+    verdict = (
+        f"{out['speedup_same_set']:.2f}x (asserted >= {SPEEDUP_FLOOR}x)"
+        if out["speedup_asserted"]
+        else f"{out['speedup_same_set']:.2f}x (interpret mode: exempt)"
+    )
+    print(
+        f"\n[{out['mode']}] {out['queries']} queries, {out['workers']} workers: "
+        f"loose-ops {out['jnp_wall_s']:.2f}s; fused step on "
+        f"{out['fused_queries']} queries ({out['checked_states']} states) "
+        f"bit-identical; fused/loose = {verdict}"
+    )
+
+
+if __name__ == "__main__":
+    main()

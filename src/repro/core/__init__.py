@@ -5,7 +5,10 @@ Layers:
   ordering   — RI GreatestConstraintFirst ordering (+ SI tie-break)
   domains    — RI-DS domains: init, arc consistency, forward checking
   plan       — SearchPlan: static arrays for the engine
-  engine     — frontier-vectorized work-stealing search (jax)
+  frontier   — ring-buffer worker stacks: SoA state + pop/push/compact ops
+  extend     — the expansion step behind the StepBackend seam
+               (jnp reference / fused Pallas extend_step kernel)
+  engine     — while_loop drivers, steal rounds, shard_map glue
   scheduler  — steal-round policy (shared with the GNN batch balancer)
   ref        — sequential + brute-force oracles
   session    — prepared-query session API (SubgraphIndex / Query /

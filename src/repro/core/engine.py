@@ -1,65 +1,53 @@
-"""Frontier-vectorized parallel RI/RI-DS search engine.
+"""Frontier-vectorized parallel RI/RI-DS search engine — the driver layer.
 
-This is the TPU-native form of the paper's work-stealing DFS (DESIGN.md §2):
+The TPU-native form of the paper's work-stealing DFS (DESIGN.md §2),
+split into a layered pipeline (DESIGN.md §6): `repro.core.frontier` owns
+the ring-buffer stack state and ops, `repro.core.extend` the expansion
+step behind the ``StepBackend`` seam (``step_backend="jnp"`` loose-ops
+reference / ``"pallas"`` fused `repro.kernels.extend_step` kernel), and
+this module only the ``lax.while_loop`` drivers, the steal rounds
+(`repro.core.scheduler` decides, this module moves entries), and the
+``shard_map`` glue.  **Both** execution paths call the one shared step:
 
-* Each of ``V`` workers owns a **ring-buffer stack** of search-tree entries in
-  dense SoA arrays.  An entry is ``(depth, mapping, used-bitmap,
-  candidate-bitmap)`` — the candidate bitmap coalesces *all* untried siblings
-  of one tree node (the paper's task-coalescing taken to its limit; a task
-  ``(μ_i, v_t)`` is one bit).
-* Every step, each worker pops its top ``expand_width`` entries, extracts the
-  lowest untried candidate bit per entry, pushes back surviving parents below
-  the freshly created children (depth-first order preserved per worker), and
-  counts matches at full depth.  Candidate bitmaps for children are
-  ``domain ∧ ¬used ∧ (adjacency rows of mapped parents)`` — the paper's
-  "check consistency before spawning" (§3.1), so every stacked task is
-  consistent.
-* Every ``rebalance_interval`` steps, workers run a steal round
-  (`repro.core.scheduler`): bottom-of-stack entries (near-root ⇒ big
-  subtrees) from loaded workers move to starving ones.
-* Termination: the global entry count hits zero — the all-reduce analogue of
-  the paper's ring-token detection.
+* **single device** (``run(plan, cfg)``): all ``V`` workers in one array
+  program; the steal round is plain gathers/scatters over ``V``.
+* **mesh-sharded** (``run(plan, cfg, mesh=...)``): the ``V`` axis shards
+  over the mesh ``data`` axis via ``shard_map`` (DESIGN.md §2.4); steal
+  rounds all-gather occupancy + donor rows, every device computes the
+  *same* `repro.core.scheduler.plan_steals`, termination is a cross-device
+  ``lax.psum``.  With ``D == 1`` the collectives are identities and
+  results are bit-identical to the single-device path.
 
-Everything is static-shape jnp inside ``lax.while_loop``.  Two execution
-paths share the expansion step (DESIGN.md §2.4):
-
-* **single device** (``run(plan, cfg)``): all ``V`` workers live in one
-  array program; the steal round is plain gathers/scatters over the ``V``
-  axis.
-* **mesh-sharded** (``run(plan, cfg, mesh=...)``): the ``V`` axis is
-  sharded over the mesh ``data`` axis via ``shard_map`` — each device owns
-  ``V / D`` worker stacks.  A steal round all-gathers the stack-occupancy
-  vector and each donor's bottom ``steal_chunk`` entries (``lax.all_gather``
-  over ``data``), every device computes the *same* global steal plan
-  (`repro.core.scheduler.plan_steals`), and scatters only the entries bound
-  for its local receivers.  Termination is a cross-device ``lax.psum`` of
-  the total entry count — the collective form of the paper's ring-token
-  detection.  With ``D == 1`` (or ``mesh=None``) the collectives are
-  identities and results are bit-identical to the single-device path.
-
-Counters (matches / states / steals / depth sums) are **per-worker int32**:
-on a mesh each device accumulates only its own workers' counts, so the
-per-device bound is 2^31 per *worker*, not per collection — single-instance
-state counts in our collections are far below that, and the multi-query
-driver sums per-instance results in int64 on host.
+Counters are per-worker int32 (DESIGN.md §2.5); cross-query aggregation
+happens on host in int64.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec
+from jax.sharding import Mesh
 
-from repro.core import scheduler
-from repro.core.graph import WORD_BITS, bitmap_from_indices
+from repro.core import extend, frontier, scheduler
 from repro.core.plan import SearchPlan
+
+# Re-exports: the state/plan layers moved out in the §6 split but remain
+# importable from the engine (configs/sge.py, session, tests, dryrun).
+from repro.core.extend import (  # noqa: F401
+    PLAN_LOGICAL, PlanArrays, abstract_plan_arrays, make_plan_arrays,
+    plan_partition_specs,
+)
+from repro.core.frontier import (  # noqa: F401
+    STATE_LOGICAL, EngineState, abstract_engine_state, init_state,
+    state_partition_specs,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,14 +71,15 @@ class EngineConfig:
       collect_matches: if > 0, materialize up to this many mappings per worker
         into a ring buffer (the paper's tools print matches; counting is the
         benchmarked mode).
-      use_pallas: route candidate-bitmap computation through the Pallas
-        kernel (`repro.kernels.ops.candidate_mask`) instead of pure jnp.
+      step_backend: which ``StepBackend`` expands lanes (DESIGN.md §6.2):
+        ``"jnp"`` (loose-ops reference) or ``"pallas"`` (the fused
+        `repro.kernels.extend_step` kernel — interpret mode off-TPU).
+      use_pallas: with ``step_backend="jnp"``, route only the
+        candidate-bitmap AND through `repro.kernels.candidate_mask` (the
+        pre-seam kerneling point; the fused backend subsumes it).
       store_used: keep per-entry used-bitmaps on the stack (True) or
-        recompute them from the mapping at expansion time (False).  §Perf
-        iteration 7: the used-bitmap duplicates information already in the
-        mapping; dropping it removes one of the two W-wide stack arrays
-        (≈1/3 of stack scatter/steal traffic) at the cost of p_pad fused
-        VPU ops per expanded lane.
+        recompute them from the mapping at expansion time (False; refuted
+        as a default by §Perf iteration 7 — see EXPERIMENTS.md §Perf).
     """
 
     n_workers: int = 1
@@ -103,43 +92,21 @@ class EngineConfig:
     stack_cap: int = 0
     max_steps: int = 0
     collect_matches: int = 0
+    step_backend: str = "jnp"
     use_pallas: bool = False
     store_used: bool = True
+
+    def __post_init__(self):
+        if self.step_backend not in extend.STEP_BACKENDS:
+            raise ValueError(
+                f"step_backend={self.step_backend!r}; expected one of "
+                f"{extend.STEP_BACKENDS}"
+            )
 
     def resolved_stack_cap(self, p_pad: int) -> int:
         if self.stack_cap:
             return self.stack_cap
         return self.expand_width * (p_pad + 2) + self.steal_chunk + 8
-
-
-class PlanArrays(NamedTuple):
-    """Device-resident static plan arrays (see SearchPlan)."""
-
-    order_valid: jnp.ndarray  # [p_pad] bool (True for real positions)
-    parent_pos: jnp.ndarray  # [p_pad, mp] int32
-    parent_dir: jnp.ndarray  # [p_pad, mp]
-    parent_elab: jnp.ndarray  # [p_pad, mp]
-    dom_bits: jnp.ndarray  # [p_pad, w] uint32
-    adj_bits: jnp.ndarray  # [n_elab, 2, n_t, w] uint32
-    n_p: jnp.ndarray  # scalar int32 (actual pattern size)
-
-
-class EngineState(NamedTuple):
-    st_depth: jnp.ndarray  # [V, S] int32
-    st_map: jnp.ndarray  # [V, S, P] int32
-    st_used: jnp.ndarray  # [V, S, W] uint32
-    st_cand: jnp.ndarray  # [V, S, W] uint32
-    base: jnp.ndarray  # [V] int32 ring-buffer base
-    size: jnp.ndarray  # [V] int32
-    matches: jnp.ndarray  # [V] int32
-    states: jnp.ndarray  # [V] int32
-    exp_depth: jnp.ndarray  # [V] int32 summed depth of expanded entries
-    steals: jnp.ndarray  # [V] int32 entries received
-    steal_depth: jnp.ndarray  # [V] int32 summed depth of stolen entries
-    steal_rounds: jnp.ndarray  # [] int32 rounds with any transfer
-    steps: jnp.ndarray  # [] int32
-    overflow: jnp.ndarray  # [] bool — stack high-watermark breached
-    match_buf: jnp.ndarray  # [V, Mcap, P] int32 (Mcap >= 1)
 
 
 class EngineResult(NamedTuple):
@@ -155,171 +122,6 @@ class EngineResult(NamedTuple):
     overflow: bool
     match_buf: Optional[np.ndarray]
     per_worker_steals: Optional[np.ndarray] = None
-
-
-# ---------------------------------------------------------------------------
-# bit helpers
-# ---------------------------------------------------------------------------
-
-def _pop_lowest_bit(cand: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Extract the lowest set bit of a ``[W]`` uint32 bitmap.
-
-    Returns ``(valid, v, cand_without_v)``; ``v`` is the global bit index.
-    """
-    nz = cand != 0
-    valid = jnp.any(nz)
-    widx = jnp.argmax(nz)  # first non-zero word (0 if none)
-    word = cand[widx]
-    # trailing zeros = popcount(~w & (w - 1)); word==0 guarded by `valid`.
-    tz = lax.population_count(~word & (word - jnp.uint32(1)))
-    v = widx.astype(jnp.int32) * WORD_BITS + tz.astype(jnp.int32)
-    cand2 = cand.at[widx].set(word & (word - jnp.uint32(1)))
-    return valid, v, cand2
-
-
-def _bit_row(v: jnp.ndarray, w: int) -> jnp.ndarray:
-    """One-hot ``[w]`` uint32 bitmap with bit ``v`` set."""
-    word = v // WORD_BITS
-    bit = jnp.uint32(1) << (v % WORD_BITS).astype(jnp.uint32)
-    return jnp.zeros((w,), jnp.uint32).at[word].set(bit)
-
-
-def _used_from_map(map_: jnp.ndarray, depth: jnp.ndarray, w: int) -> jnp.ndarray:
-    """Reconstruct the used-bitmap from mapped targets at positions < depth
-    (store_used=False path)."""
-    p_pad = map_.shape[0]
-
-    def body(j, u):
-        valid = (j < depth) & (map_[j] >= 0)
-        t = jnp.maximum(map_[j], 0)
-        word = t // WORD_BITS
-        bit = jnp.where(valid, jnp.uint32(1) << (t % WORD_BITS).astype(jnp.uint32),
-                        jnp.uint32(0))
-        return u.at[word].set(u[word] | bit)
-
-    return lax.fori_loop(0, p_pad, body, jnp.zeros((w,), jnp.uint32))
-
-
-def _compute_cand_jnp(
-    plan: PlanArrays, pos: jnp.ndarray, map_: jnp.ndarray, used: jnp.ndarray
-) -> jnp.ndarray:
-    """Candidate bitmap for order position ``pos`` given mapping/used.
-
-    ``dom[pos] ∧ ¬used ∧ ⋀_parents adj_bits[elab, dir, mapped_parent]`` —
-    the engine's hot loop; `repro.kernels.candidate_mask` is the Pallas form.
-    """
-    mp = plan.parent_pos.shape[1]
-    safe_pos = jnp.clip(pos, 0, plan.dom_bits.shape[0] - 1)
-    cand = plan.dom_bits[safe_pos] & ~used
-
-    def body(j, c):
-        pp = plan.parent_pos[safe_pos, j]
-        pd = plan.parent_dir[safe_pos, j]
-        pl = plan.parent_elab[safe_pos, j]
-        t = jnp.where(pp >= 0, map_[jnp.maximum(pp, 0)], 0)
-        row = plan.adj_bits[pl, pd, jnp.clip(t, 0, plan.adj_bits.shape[2] - 1)]
-        return jnp.where(pp >= 0, c & row, c)
-
-    return lax.fori_loop(0, mp, body, cand)
-
-
-# ---------------------------------------------------------------------------
-# per-worker expansion step (vmapped over the worker axis)
-# ---------------------------------------------------------------------------
-
-def _worker_step(cfg: EngineConfig, plan: PlanArrays, compute_cand, carry):
-    (st_depth, st_map, st_used, st_cand, base, size, matches, states, exp_depth, mbuf) = carry
-    s_cap = st_depth.shape[0]
-    p_pad = st_map.shape[1]
-    w = st_cand.shape[1]
-    e = cfg.expand_width
-
-    # ---- select top-of-stack lanes (respecting the capacity guard) --------
-    space = s_cap - size
-    k = jnp.minimum(jnp.minimum(size, e), space).astype(jnp.int32)
-    lane = jnp.arange(e, dtype=jnp.int32)
-    lane_on = lane < k
-    pos = size - 1 - lane  # top-first
-    slot = jnp.where(lane_on, (base + pos) % s_cap, 0)
-
-    depth = jnp.where(lane_on, st_depth[slot], 0)
-    cand = jnp.where(lane_on[:, None], st_cand[slot], jnp.uint32(0))
-    map_ = st_map[slot]
-    if cfg.store_used:
-        used = st_used[slot]
-    else:
-        used = jax.vmap(lambda m, dd: _used_from_map(m, dd, w))(map_, depth)
-
-    # ---- extract one candidate per lane ------------------------------------
-    valid, v, cand2 = jax.vmap(_pop_lowest_bit)(cand)
-    valid = valid & lane_on
-    states = states + jnp.sum(valid, dtype=jnp.int32)
-    exp_depth = exp_depth + jnp.sum(jnp.where(valid, depth, 0), dtype=jnp.int32)
-
-    # ---- build children -----------------------------------------------------
-    map2 = jnp.where(
-        valid[:, None],
-        map_.at[jnp.arange(e), jnp.clip(depth, 0, p_pad - 1)].set(v),
-        map_,
-    )
-    used2 = jnp.where(valid[:, None], used | jax.vmap(_bit_row, (0, None))(v, w), used)
-    is_match = valid & (depth + 1 >= plan.n_p)
-    matches = matches + jnp.sum(is_match, dtype=jnp.int32)
-
-    want_child = valid & ~is_match
-    child_cand = compute_cand(
-        jnp.where(want_child, depth + 1, 0), map2, used2
-    )
-    child_cand = jnp.where(want_child[:, None], child_cand, jnp.uint32(0))
-    has_child = want_child & jnp.any(child_cand != 0, axis=-1)
-
-    # ---- match ring buffer ---------------------------------------------------
-    if cfg.collect_matches > 0:
-        mcap = mbuf.shape[0]
-        # per-lane match ordinal within this step
-        m_prefix = jnp.cumsum(is_match.astype(jnp.int32)) - is_match
-        m_slot = (matches - jnp.sum(is_match, dtype=jnp.int32) + m_prefix) % mcap
-        m_slot = jnp.where(is_match, m_slot, mcap)  # drop non-matches
-        mbuf = mbuf.at[m_slot].set(map2, mode="drop")
-
-    # ---- push back: parents (below) then children (above), lane k-1 .. 0 ----
-    parent_keep = lane_on & jnp.any(cand2 != 0, axis=-1)
-    # reversed-lane order: lane k-1 emitted first (deepest lane 0 ends on top)
-    rev = e - 1 - lane
-    pk_r = parent_keep[rev]
-    hc_r = has_child[rev]
-    per_lane = pk_r.astype(jnp.int32) + hc_r.astype(jnp.int32)
-    offs = jnp.cumsum(per_lane) - per_lane  # position of lane rev[i]'s first push
-    parent_out = jnp.where(pk_r, offs, -1)
-    child_out = jnp.where(hc_r, offs + pk_r.astype(jnp.int32), -1)
-    # map back to lane order
-    inv = rev  # reversal is its own inverse
-    parent_out = parent_out[inv]
-    child_out = child_out[inv]
-    total_push = jnp.sum(per_lane)
-
-    new_size = size - k + total_push
-    push_base = size - k  # logical position of first pushed entry
-
-    def slots_for(out_pos):
-        return jnp.where(out_pos >= 0, (base + push_base + out_pos) % s_cap, s_cap)
-
-    p_slots = slots_for(parent_out)
-    c_slots = slots_for(child_out)
-
-    st_depth = st_depth.at[p_slots].set(depth, mode="drop")
-    st_map = st_map.at[p_slots].set(map_, mode="drop")
-    st_cand = st_cand.at[p_slots].set(cand2, mode="drop")
-
-    st_depth = st_depth.at[c_slots].set(depth + 1, mode="drop")
-    st_map = st_map.at[c_slots].set(map2, mode="drop")
-    st_cand = st_cand.at[c_slots].set(child_cand, mode="drop")
-
-    if cfg.store_used:
-        st_used = st_used.at[p_slots].set(used, mode="drop")
-        st_used = st_used.at[c_slots].set(used2, mode="drop")
-
-    return (st_depth, st_map, st_used, st_cand, base, new_size, matches, states, exp_depth, mbuf)
 
 
 # ---------------------------------------------------------------------------
@@ -388,114 +190,16 @@ def _steal_round(cfg: EngineConfig, state: EngineState) -> EngineState:
 # driver
 # ---------------------------------------------------------------------------
 
-def make_plan_arrays(plan: SearchPlan) -> PlanArrays:
-    return PlanArrays(
-        order_valid=jnp.asarray(plan.order >= 0),
-        parent_pos=jnp.asarray(plan.parent_pos, jnp.int32),
-        parent_dir=jnp.asarray(plan.parent_dir, jnp.int32),
-        parent_elab=jnp.asarray(plan.parent_elab, jnp.int32),
-        dom_bits=jnp.asarray(plan.dom_bits, jnp.uint32),
-        adj_bits=jnp.asarray(plan.adj_bits, jnp.uint32),
-        n_p=jnp.asarray(plan.n_p, jnp.int32),
-    )
-
-
-def init_state(plan: SearchPlan, cfg: EngineConfig) -> EngineState:
-    """Initial work distribution (paper §3.3): depth-0 candidates are split
-    into equal contiguous target-node ranges, one root entry per worker."""
-    v = cfg.n_workers
-    p_pad, w = plan.p_pad, plan.w
-    s_cap = cfg.resolved_stack_cap(p_pad)
-    mcap = max(1, cfg.collect_matches)
-
-    splits = np.linspace(0, plan.n_t, v + 1).astype(np.int64)
-    root_cands = np.zeros((v, w), dtype=np.uint32)
-    for k in range(v):
-        idx = np.arange(splits[k], splits[k + 1])
-        if idx.size:
-            root_cands[k] = bitmap_from_indices(idx, plan.n_t, w) & plan.dom_bits[0]
-    if not plan.satisfiable:
-        root_cands[:] = 0
-
-    st_depth = np.zeros((v, s_cap), dtype=np.int32)
-    st_map = np.full((v, s_cap, p_pad), -1, dtype=np.int32)
-    st_used = np.zeros((v, s_cap, w if cfg.store_used else 1), dtype=np.uint32)
-    st_cand = np.zeros((v, s_cap, w), dtype=np.uint32)
-    st_cand[:, 0] = root_cands
-    size = (root_cands.any(axis=1)).astype(np.int32)
-
-    return EngineState(
-        st_depth=jnp.asarray(st_depth),
-        st_map=jnp.asarray(st_map),
-        st_used=jnp.asarray(st_used),
-        st_cand=jnp.asarray(st_cand),
-        base=jnp.zeros((v,), jnp.int32),
-        size=jnp.asarray(size),
-        matches=jnp.zeros((v,), jnp.int32),
-        states=jnp.zeros((v,), jnp.int32),
-        exp_depth=jnp.zeros((v,), jnp.int32),
-        steals=jnp.zeros((v,), jnp.int32),
-        steal_depth=jnp.zeros((v,), jnp.int32),
-        steal_rounds=jnp.zeros((), jnp.int32),
-        steps=jnp.zeros((), jnp.int32),
-        overflow=jnp.zeros((), jnp.bool_),
-        match_buf=jnp.full((v, mcap, p_pad), -1, jnp.int32),
-    )
-
-
 def make_expand_fn(cfg: EngineConfig, plan: PlanArrays):
     """Build the purely worker-local part of one engine round:
-    ``rebalance_interval`` expansion steps, vmapped over whatever worker
-    axis the caller holds (all ``V`` workers single-device, or the local
-    ``V / D`` shard under ``shard_map``)."""
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops
-
-        rows = kops.flatten_adj_rows(plan.adj_bits)
-        n_rows = rows.shape[0] - 1
-        n_t = plan.adj_bits.shape[2]
-        p_max = plan.dom_bits.shape[0] - 1
-
-        def compute_cand(pos, map2, used2):
-            safe_pos = jnp.clip(pos, 0, p_max)
-            row_idx = jax.vmap(
-                lambda p, m: kops.flat_row_index(
-                    plan.parent_pos[p], plan.parent_dir[p], plan.parent_elab[p],
-                    m, n_t, n_rows,
-                )
-            )(safe_pos, map2)
-            return kops.candidate_mask(rows, plan.dom_bits, safe_pos, row_idx, used2)
-    else:
-        compute_one = functools.partial(_compute_cand_jnp, plan)
-
-        def compute_cand(pos, map2, used2):
-            return jax.vmap(compute_one)(pos, map2, used2)
-
-    step_fn = jax.vmap(
-        functools.partial(_worker_step, cfg, plan, compute_cand),
-        in_axes=((0, 0, 0, 0, 0, 0, 0, 0, 0, 0),),
-        out_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
-    )
+    ``rebalance_interval`` shared expansion steps
+    (`repro.core.extend.make_step_fn`), over whatever worker axis the
+    caller holds (all ``V`` workers single-device, or the local ``V / D``
+    shard under ``shard_map``)."""
+    step = extend.make_step_fn(cfg, plan)
 
     def expand(state: EngineState) -> EngineState:
-        def inner(_, st: EngineState) -> EngineState:
-            carry = (
-                st.st_depth, st.st_map, st.st_used, st.st_cand,
-                st.base, st.size, st.matches, st.states, st.exp_depth,
-                st.match_buf,
-            )
-            out = step_fn(carry)
-            (st_depth, st_map, st_used, st_cand, base, size, matches, states,
-             exp_depth, mbuf) = out
-            s_cap = st_depth.shape[1]
-            overflow = st.overflow | jnp.any(size > s_cap - 1)
-            return st._replace(
-                st_depth=st_depth, st_map=st_map, st_used=st_used, st_cand=st_cand,
-                base=base, size=size, matches=matches, states=states,
-                exp_depth=exp_depth, match_buf=mbuf, overflow=overflow,
-            )
-
-        return lax.fori_loop(0, cfg.rebalance_interval, inner, state)
+        return lax.fori_loop(0, cfg.rebalance_interval, lambda _, st: step(st), state)
 
     return expand
 
@@ -519,8 +223,12 @@ def _engine_loop(cfg: EngineConfig, plan: PlanArrays, state: EngineState) -> Eng
     max_steps = cfg.max_steps or (1 << 30)
     body = make_round_fn(cfg, plan)
 
+    # ~overflow: a full ring freezes its worker (the pop guard yields k=0
+    # while size > 0), so an overflowed run can never drain — abort it
+    # promptly; the result is undercounted either way and the session
+    # retries with a doubled stack_cap (`repro.core.session.Enumerator.run`).
     def cond(state: EngineState) -> jnp.ndarray:
-        return (jnp.sum(state.size) > 0) & (state.steps < max_steps)
+        return (jnp.sum(state.size) > 0) & (state.steps < max_steps) & ~state.overflow
 
     return lax.while_loop(cond, body, state)
 
@@ -547,62 +255,18 @@ def mesh_signature(mesh: Optional[Mesh]) -> Optional[tuple]:
     )
 
 
-def state_partition_specs(axis: str) -> EngineState:
-    """PartitionSpecs for :class:`EngineState`: worker-axis arrays sharded
-    over ``axis``, loop scalars replicated."""
-    P = PartitionSpec
-    return EngineState(
-        st_depth=P(axis, None),
-        st_map=P(axis, None, None),
-        st_used=P(axis, None, None),
-        st_cand=P(axis, None, None),
-        base=P(axis),
-        size=P(axis),
-        matches=P(axis),
-        states=P(axis),
-        exp_depth=P(axis),
-        steals=P(axis),
-        steal_depth=P(axis),
-        steal_rounds=P(),
-        steps=P(),
-        overflow=P(),
-        match_buf=P(axis, None, None),
-    )
-
-
-def plan_partition_specs() -> PlanArrays:
-    """PartitionSpecs for :class:`PlanArrays`: fully replicated (every
-    device needs the whole domain/adjacency bitmaps to expand its workers)."""
-    P = PartitionSpec
-    return PlanArrays(
-        order_valid=P(None),
-        parent_pos=P(None, None),
-        parent_dir=P(None, None),
-        parent_elab=P(None, None),
-        dom_bits=P(None, None),
-        adj_bits=P(None, None, None, None),
-        n_p=P(),
-    )
-
-
 def _steal_round_sharded(cfg: EngineConfig, state: EngineState, axis: str) -> EngineState:
     """One steal round under ``shard_map``: ``state`` holds this device's
     ``V / D`` worker stacks.
 
-    Protocol (the collective form of :func:`_steal_round`):
-
-    1. ``all_gather`` the local occupancy vectors → global ``sizes [V]``.
-    2. Every device runs the same deterministic
-       :func:`repro.core.scheduler.plan_steals` on it — no coordinator.
-    3. ``all_gather`` each donor's bottom ``steal_chunk`` stack rows (the
-       steal traffic: ``V·C·(1 + P + W_used + W)`` words per round).
-    4. Each device scatters only the donated entries whose destination
-       worker lives in its local shard; donors advance their ring-buffer
-       base by their (globally agreed) accepted count.
-
-    Identical to the single-device round entry-for-entry: the gathered
-    ``don_*`` arrays and the global plan are exactly what the unsharded
-    path computes in one address space.
+    The collective form of :func:`_steal_round` (DESIGN.md §2.4):
+    ``all_gather`` occupancy → every device runs the same deterministic
+    :func:`repro.core.scheduler.plan_steals` (no coordinator) →
+    ``all_gather`` each donor's bottom ``steal_chunk`` rows (the steal
+    traffic, ``V·C·(1 + P + W_used + W)`` words/round) → each device
+    scatters only entries addressed to its local receivers; donors advance
+    base by the globally agreed accepted count.  Entry-for-entry identical
+    to the unsharded round computed in one address space.
     """
     policy = scheduler.StealPolicy(
         steal_chunk=cfg.steal_chunk, keep_min=cfg.keep_min, recv_cap=cfg.recv_cap
@@ -674,8 +338,9 @@ def _steal_round_sharded(cfg: EngineConfig, state: EngineState, axis: str) -> En
 def _sharded_device_loop(
     cfg: EngineConfig, axis: str, plan: PlanArrays, state: EngineState
 ) -> EngineState:
-    """Per-device program run under ``shard_map``: local expansion rounds,
-    collective steal rounds, and psum-based termination detection.
+    """Per-device program run under ``shard_map``: local expansion rounds
+    (the same shared step as the single-device path), collective steal
+    rounds, and psum-based termination detection.
 
     The loop carries the psum'd global entry count so the `while` condition
     is collective-free; every device sees the same count and therefore runs
@@ -687,19 +352,26 @@ def _sharded_device_loop(
     def global_size(st: EngineState) -> jnp.ndarray:
         return lax.psum(jnp.sum(st.size), axis)
 
+    def global_overflow(st: EngineState) -> jnp.ndarray:
+        return lax.psum(st.overflow.astype(jnp.int32), axis) > 0
+
     def body(carry):
-        st, _ = carry
+        st, _, _ = carry
         st = expand(st)
         if cfg.work_stealing and cfg.n_workers > 1:
             st = _steal_round_sharded(cfg, st, axis)
         st = st._replace(steps=st.steps + cfg.rebalance_interval)
-        return st, global_size(st)
+        return st, global_size(st), global_overflow(st)
 
+    # ~overflow: abort promptly on any device's overflow (see _engine_loop);
+    # the psum'd flag keeps every device exiting the same iteration.
     def cond(carry):
-        st, gsize = carry
-        return (gsize > 0) & (st.steps < max_steps)
+        st, gsize, govf = carry
+        return (gsize > 0) & (st.steps < max_steps) & ~govf
 
-    state, _ = lax.while_loop(cond, body, (state, global_size(state)))
+    state, _, _ = lax.while_loop(
+        cond, body, (state, global_size(state), global_overflow(state))
+    )
     # overflow is device-local until here; replicate so the P() out-spec holds
     overflow = lax.psum(state.overflow.astype(jnp.int32), axis) > 0
     return state._replace(overflow=overflow)
@@ -746,80 +418,6 @@ def run_sharded(plan: SearchPlan, cfg: EngineConfig, mesh: Mesh) -> EngineResult
     state = init_state(plan, cfg)
     final = jax.block_until_ready(fn(arrays, state))
     return result_from_state(final, cfg)
-
-
-# ---------------------------------------------------------------------------
-# abstract builders (dry-run lowering without allocation)
-# ---------------------------------------------------------------------------
-
-def abstract_plan_arrays(
-    n_t: int, w: int, p_pad: int, max_parents: int, n_elab: int = 1
-) -> PlanArrays:
-    sds = jax.ShapeDtypeStruct
-    return PlanArrays(
-        order_valid=sds((p_pad,), jnp.bool_),
-        parent_pos=sds((p_pad, max_parents), jnp.int32),
-        parent_dir=sds((p_pad, max_parents), jnp.int32),
-        parent_elab=sds((p_pad, max_parents), jnp.int32),
-        dom_bits=sds((p_pad, w), jnp.uint32),
-        adj_bits=sds((n_elab, 2, n_t, w), jnp.uint32),
-        n_p=sds((), jnp.int32),
-    )
-
-
-PLAN_LOGICAL = PlanArrays(
-    order_valid=(None,),
-    parent_pos=(None, None),
-    parent_dir=(None, None),
-    parent_elab=(None, None),
-    dom_bits=(None, "tensor"),
-    adj_bits=(None, None, None, "tensor"),
-    n_p=(),
-)
-
-
-def abstract_engine_state(cfg: EngineConfig, w: int, p_pad: int) -> EngineState:
-    v = cfg.n_workers
-    s_cap = cfg.resolved_stack_cap(p_pad)
-    mcap = max(1, cfg.collect_matches)
-    w_used = w if cfg.store_used else 1
-    sds = jax.ShapeDtypeStruct
-    return EngineState(
-        st_depth=sds((v, s_cap), jnp.int32),
-        st_map=sds((v, s_cap, p_pad), jnp.int32),
-        st_used=sds((v, s_cap, w_used), jnp.uint32),
-        st_cand=sds((v, s_cap, w), jnp.uint32),
-        base=sds((v,), jnp.int32),
-        size=sds((v,), jnp.int32),
-        matches=sds((v,), jnp.int32),
-        states=sds((v,), jnp.int32),
-        exp_depth=sds((v,), jnp.int32),
-        steals=sds((v,), jnp.int32),
-        steal_depth=sds((v,), jnp.int32),
-        steal_rounds=sds((), jnp.int32),
-        steps=sds((), jnp.int32),
-        overflow=sds((), jnp.bool_),
-        match_buf=sds((v, mcap, p_pad), jnp.int32),
-    )
-
-
-STATE_LOGICAL = EngineState(
-    st_depth=("worker", None),
-    st_map=("worker", None, None),
-    st_used=("worker", None, "tensor"),
-    st_cand=("worker", None, "tensor"),
-    base=("worker",),
-    size=("worker",),
-    matches=("worker",),
-    states=("worker",),
-    exp_depth=("worker",),
-    steals=("worker",),
-    steal_depth=("worker",),
-    steal_rounds=(),
-    steps=(),
-    overflow=(),
-    match_buf=("worker", None, None),
-)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))

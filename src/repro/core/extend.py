@@ -1,0 +1,406 @@
+"""The expansion step — candidate bitmaps, lowest-untried-bit extraction,
+child emission, match counting — behind the ``StepBackend`` seam
+(DESIGN.md §6.2).
+
+One expansion step, for every popped lane: extract the lowest untried
+candidate bit ``v``, extend the mapping, build the child's candidate
+bitmap ``dom[pos+1] ∧ ¬used' ∧ ⋀ adj_rows(mapped parents)`` (the paper's
+check-consistency-before-spawning rule, §3.1), and flag matches at full
+depth.  The work is *lane-flat*: the step function flattens all
+``V·expand_width`` lanes of its worker shard into one batch, so a backend
+sees a single dense batch regardless of worker count or mesh shard — and a
+Pallas backend gets one big grid instead of ``V`` vmapped kernel calls.
+
+Backends (selected by ``EngineConfig.step_backend``):
+
+* ``"jnp"`` — :class:`JnpStepBackend`, the loose-ops reference: pure jnp
+  phases with full HBM round-trips between them; with
+  ``EngineConfig.use_pallas`` the candidate-bitmap AND routes through the
+  `repro.kernels.candidate_mask` kernel (the pre-seam behavior, kept as
+  the mask-only kerneling point of comparison).
+* ``"pallas"`` — :class:`PallasStepBackend`, the fused
+  `repro.kernels.extend_step` kernel: adjacency-row gathers
+  (scalar-prefetched), the ``dom ∧ ¬used ∧ parents`` AND-tree, per-lane
+  lowest-bit extraction and match flagging in **one** kernel invocation
+  (DESIGN.md §6.3) — subsuming ``candidate_mask`` on the engine path.
+
+Both backends are bit-identical on every :class:`StepLanes` field the
+engine consumes (property-tested in ``tests/test_extend_step.py``); the
+driver (`repro.core.engine`) never knows which one ran.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Protocol, Tuple, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec
+
+from repro.core import frontier
+from repro.core.frontier import EngineState
+from repro.core.graph import WORD_BITS
+from repro.core.plan import SearchPlan
+
+if TYPE_CHECKING:  # engine imports extend; annotations only
+    from repro.core.engine import EngineConfig
+
+STEP_BACKENDS = ("jnp", "pallas")
+
+
+class PlanArrays(NamedTuple):
+    """Device-resident static plan arrays (see SearchPlan)."""
+
+    order_valid: jnp.ndarray  # [p_pad] bool (True for real positions)
+    parent_pos: jnp.ndarray  # [p_pad, mp] int32
+    parent_dir: jnp.ndarray  # [p_pad, mp]
+    parent_elab: jnp.ndarray  # [p_pad, mp]
+    dom_bits: jnp.ndarray  # [p_pad, w] uint32
+    adj_bits: jnp.ndarray  # [n_elab, 2, n_t, w] uint32
+    n_p: jnp.ndarray  # scalar int32 (actual pattern size)
+
+
+def make_plan_arrays(plan: SearchPlan) -> PlanArrays:
+    return PlanArrays(
+        order_valid=jnp.asarray(plan.order >= 0),
+        parent_pos=jnp.asarray(plan.parent_pos, jnp.int32),
+        parent_dir=jnp.asarray(plan.parent_dir, jnp.int32),
+        parent_elab=jnp.asarray(plan.parent_elab, jnp.int32),
+        dom_bits=jnp.asarray(plan.dom_bits, jnp.uint32),
+        adj_bits=jnp.asarray(plan.adj_bits, jnp.uint32),
+        n_p=jnp.asarray(plan.n_p, jnp.int32),
+    )
+
+
+def abstract_plan_arrays(
+    n_t: int, w: int, p_pad: int, max_parents: int, n_elab: int = 1
+) -> PlanArrays:
+    sds = jax.ShapeDtypeStruct
+    return PlanArrays(
+        order_valid=sds((p_pad,), jnp.bool_),
+        parent_pos=sds((p_pad, max_parents), jnp.int32),
+        parent_dir=sds((p_pad, max_parents), jnp.int32),
+        parent_elab=sds((p_pad, max_parents), jnp.int32),
+        dom_bits=sds((p_pad, w), jnp.uint32),
+        adj_bits=sds((n_elab, 2, n_t, w), jnp.uint32),
+        n_p=sds((), jnp.int32),
+    )
+
+
+PLAN_LOGICAL = PlanArrays(
+    order_valid=(None,),
+    parent_pos=(None, None),
+    parent_dir=(None, None),
+    parent_elab=(None, None),
+    dom_bits=(None, "tensor"),
+    adj_bits=(None, None, None, "tensor"),
+    n_p=(),
+)
+
+
+def plan_partition_specs() -> PlanArrays:
+    """PartitionSpecs for :class:`PlanArrays`: fully replicated (every
+    device needs the whole domain/adjacency bitmaps to expand its workers)."""
+    P = PartitionSpec
+    return PlanArrays(
+        order_valid=P(None),
+        parent_pos=P(None, None),
+        parent_dir=P(None, None),
+        parent_elab=P(None, None),
+        dom_bits=P(None, None),
+        adj_bits=P(None, None, None, None),
+        n_p=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bit helpers
+# ---------------------------------------------------------------------------
+
+def pop_lowest_bit(cand: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Extract the lowest set bit of a ``[W]`` uint32 bitmap.
+
+    Returns ``(valid, v, cand_without_v)``; ``v`` is the global bit index.
+    """
+    nz = cand != 0
+    valid = jnp.any(nz)
+    widx = jnp.argmax(nz)  # first non-zero word (0 if none)
+    word = cand[widx]
+    # trailing zeros = popcount(~w & (w - 1)); word==0 guarded by `valid`.
+    tz = lax.population_count(~word & (word - jnp.uint32(1)))
+    v = widx.astype(jnp.int32) * WORD_BITS + tz.astype(jnp.int32)
+    cand2 = cand.at[widx].set(word & (word - jnp.uint32(1)))
+    return valid, v, cand2
+
+
+def bit_row(v: jnp.ndarray, w: int) -> jnp.ndarray:
+    """One-hot ``[w]`` uint32 bitmap with bit ``v`` set."""
+    word = v // WORD_BITS
+    bit = jnp.uint32(1) << (v % WORD_BITS).astype(jnp.uint32)
+    return jnp.zeros((w,), jnp.uint32).at[word].set(bit)
+
+
+def compute_cand_jnp(
+    plan: PlanArrays, pos: jnp.ndarray, map_: jnp.ndarray, used: jnp.ndarray
+) -> jnp.ndarray:
+    """Candidate bitmap for order position ``pos`` given mapping/used.
+
+    ``dom[pos] ∧ ¬used ∧ ⋀_parents adj_bits[elab, dir, mapped_parent]`` —
+    the engine's hot loop; `repro.kernels.extend_step` is the fused Pallas
+    form and `repro.kernels.candidate_mask` the mask-only one.
+    """
+    mp = plan.parent_pos.shape[1]
+    safe_pos = jnp.clip(pos, 0, plan.dom_bits.shape[0] - 1)
+    cand = plan.dom_bits[safe_pos] & ~used
+
+    def body(j, c):
+        pp = plan.parent_pos[safe_pos, j]
+        pd = plan.parent_dir[safe_pos, j]
+        pl = plan.parent_elab[safe_pos, j]
+        t = jnp.where(pp >= 0, map_[jnp.maximum(pp, 0)], 0)
+        row = plan.adj_bits[pl, pd, jnp.clip(t, 0, plan.adj_bits.shape[2] - 1)]
+        return jnp.where(pp >= 0, c & row, c)
+
+    return lax.fori_loop(0, mp, body, cand)
+
+
+# ---------------------------------------------------------------------------
+# the StepBackend seam
+# ---------------------------------------------------------------------------
+
+class StepLanes(NamedTuple):
+    """Everything one expansion produces per flattened lane ``[B = V·E]``.
+
+    ``v`` is informational (-1 or unspecified on invalid lanes; every
+    consumer gates on ``valid``); the stack payloads are ``cand2`` (the
+    parent's residual candidates), ``(map2, used2, child_cand)`` (the
+    child entry), and the ``is_match`` / ``has_child`` flags the driver
+    accumulates.
+    """
+
+    valid: jnp.ndarray  # [B] bool — lane had an untried candidate
+    v: jnp.ndarray  # [B] int32 — extracted target node
+    is_match: jnp.ndarray  # [B] bool — extension completed the pattern
+    has_child: jnp.ndarray  # [B] bool — child has a non-empty candidate set
+    cand2: jnp.ndarray  # [B, W] uint32 — parent candidates minus v
+    map2: jnp.ndarray  # [B, P] int32 — mapping extended with v
+    used2: jnp.ndarray  # [B, W] uint32 — used-bitmap with v set
+    child_cand: jnp.ndarray  # [B, W] uint32 — zeroed unless a child is wanted
+
+
+class StepBackend(Protocol):
+    """One expansion over a flat batch of popped lanes (DESIGN.md §6.2).
+
+    Implementations must be bit-identical on every field of
+    :class:`StepLanes` that the engine consumes (all but ``v`` on invalid
+    lanes); ``tests/test_extend_step.py`` property-tests this.
+    """
+
+    name: str
+
+    def expand_lanes(
+        self,
+        depth: jnp.ndarray,  # [B] int32 (0 on off lanes)
+        map_: jnp.ndarray,  # [B, P] int32
+        used: jnp.ndarray,  # [B, W] uint32
+        cand: jnp.ndarray,  # [B, W] uint32 (0 on off lanes)
+    ) -> StepLanes:
+        ...
+
+
+class JnpStepBackend:
+    """Reference backend: the loose-ops jnp step (optionally routing the
+    candidate-bitmap AND through the ``candidate_mask`` kernel when
+    ``cfg.use_pallas`` — the pre-seam kerneling point)."""
+
+    name = "jnp"
+
+    def __init__(self, cfg: "EngineConfig", plan: PlanArrays):
+        self.plan = plan
+        self.p_pad, self.w = plan.dom_bits.shape
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+
+            rows = kops.flatten_adj_rows(plan.adj_bits)
+            n_rows = rows.shape[0] - 1
+            n_t = plan.adj_bits.shape[2]
+            p_max = self.p_pad - 1
+
+            def compute_cand(pos, map2, used2):
+                safe_pos = jnp.clip(pos, 0, p_max)
+                row_idx = jax.vmap(
+                    lambda p, m: kops.flat_row_index(
+                        plan.parent_pos[p], plan.parent_dir[p], plan.parent_elab[p],
+                        m, n_t, n_rows,
+                    )
+                )(safe_pos, map2)
+                return kops.candidate_mask(rows, plan.dom_bits, safe_pos, row_idx, used2)
+        else:
+            compute_one = functools.partial(compute_cand_jnp, plan)
+
+            def compute_cand(pos, map2, used2):
+                return jax.vmap(compute_one)(pos, map2, used2)
+
+        self._compute_cand = compute_cand
+
+    def expand_lanes(self, depth, map_, used, cand) -> StepLanes:
+        plan = self.plan
+        b = depth.shape[0]
+        valid, v, cand2 = jax.vmap(pop_lowest_bit)(cand)
+        map2 = jnp.where(
+            valid[:, None],
+            map_.at[jnp.arange(b), jnp.clip(depth, 0, self.p_pad - 1)].set(v),
+            map_,
+        )
+        used2 = jnp.where(
+            valid[:, None], used | jax.vmap(bit_row, (0, None))(v, self.w), used
+        )
+        is_match = valid & (depth + 1 >= plan.n_p)
+        want_child = valid & ~is_match
+        child_cand = self._compute_cand(jnp.where(want_child, depth + 1, 0), map2, used2)
+        child_cand = jnp.where(want_child[:, None], child_cand, jnp.uint32(0))
+        has_child = want_child & jnp.any(child_cand != 0, axis=-1)
+        return StepLanes(valid, v, is_match, has_child, cand2, map2, used2, child_cand)
+
+
+class PallasStepBackend:
+    """The fused step: one `repro.kernels.extend_step` invocation per
+    expansion (DESIGN.md §6.3).
+
+    jnp's only jobs here are scalar bookkeeping the scalar-prefetch
+    machinery requires up front — the extracted ``v`` feeds the flattened
+    adjacency-row table the kernel's DMA pipeline chases — and the cheap
+    ``map2`` / ``used2`` payload updates.  All ``w``-wide work (extraction,
+    the AND-tree, child zeroing, match/child flagging) happens inside the
+    kernel without intermediate HBM round-trips.
+    """
+
+    name = "pallas"
+
+    def __init__(self, cfg: "EngineConfig", plan: PlanArrays):
+        from repro.kernels import ops as kops
+
+        self._kops = kops
+        self.plan = plan
+        self.p_pad, self.w = plan.dom_bits.shape
+        self.rows = kops.flatten_adj_rows(plan.adj_bits)
+        self.n_rows = self.rows.shape[0] - 1
+        self.n_t = plan.adj_bits.shape[2]
+
+    def expand_lanes(self, depth, map_, used, cand) -> StepLanes:
+        plan, kops = self.plan, self._kops
+        b = depth.shape[0]
+        valid_j, v_j, _ = jax.vmap(pop_lowest_bit)(cand)
+        map2 = jnp.where(
+            valid_j[:, None],
+            map_.at[jnp.arange(b), jnp.clip(depth, 0, self.p_pad - 1)].set(v_j),
+            map_,
+        )
+        used2 = jnp.where(
+            valid_j[:, None], used | jax.vmap(bit_row, (0, None))(v_j, self.w), used
+        )
+        child_pos = jnp.clip(depth + 1, 0, self.p_pad - 1)
+        row_idx = jax.vmap(
+            lambda p, m: kops.flat_row_index(
+                plan.parent_pos[p], plan.parent_dir[p], plan.parent_elab[p],
+                m, self.n_t, self.n_rows,
+            )
+        )(child_pos, map2)
+        cand2, child_cand, meta = kops.extend_step(
+            self.rows, plan.dom_bits, child_pos, row_idx, depth, plan.n_p,
+            used, cand,
+        )
+        valid = meta[:, 0] != 0
+        return StepLanes(
+            valid=valid,
+            v=meta[:, 1],
+            is_match=meta[:, 2] != 0,
+            has_child=meta[:, 3] != 0,
+            cand2=cand2,
+            map2=map2,
+            used2=used2,
+            child_cand=child_cand,
+        )
+
+
+def make_step_backend(cfg: "EngineConfig", plan: PlanArrays) -> StepBackend:
+    if cfg.step_backend == "jnp":
+        return JnpStepBackend(cfg, plan)
+    if cfg.step_backend == "pallas":
+        return PallasStepBackend(cfg, plan)
+    raise ValueError(
+        f"unknown step_backend {cfg.step_backend!r}; expected one of {STEP_BACKENDS}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# the shared expansion step (frontier pop -> backend -> counters -> push)
+# ---------------------------------------------------------------------------
+
+def make_step_fn(cfg: "EngineConfig", plan: PlanArrays):
+    """Build one full expansion step ``EngineState -> EngineState`` over
+    whatever worker axis the caller holds (all ``V`` workers single-device,
+    or the local ``V / D`` shard under ``shard_map``) — the one step both
+    engine paths share (DESIGN.md §6)."""
+    backend = make_step_backend(cfg, plan)
+    e = cfg.expand_width
+
+    def step(st: EngineState) -> EngineState:
+        v_loc, s_cap = st.st_depth.shape
+        pop = frontier.pop_top_k(
+            st.st_depth, st.st_map, st.st_used, st.st_cand,
+            st.base, st.size, e, store_used=cfg.store_used,
+        )
+
+        b = v_loc * e
+        lanes = backend.expand_lanes(
+            pop.depth.reshape(b),
+            pop.map.reshape(b, -1),
+            pop.used.reshape(b, -1),
+            pop.cand.reshape(b, -1),
+        )
+        sh2 = lambda x: x.reshape(v_loc, e)  # noqa: E731
+        sh3 = lambda x: x.reshape((v_loc, e) + x.shape[1:])  # noqa: E731
+        valid = sh2(lanes.valid) & pop.lane_on
+        is_match = sh2(lanes.is_match) & pop.lane_on
+        has_child = sh2(lanes.has_child) & pop.lane_on
+        cand2 = sh3(lanes.cand2)
+        map2 = sh3(lanes.map2)
+        used2 = sh3(lanes.used2)
+        child_cand = sh3(lanes.child_cand)
+
+        states = st.states + jnp.sum(valid, axis=1, dtype=jnp.int32)
+        exp_depth = st.exp_depth + jnp.sum(
+            jnp.where(valid, pop.depth, 0), axis=1, dtype=jnp.int32
+        )
+        matches = st.matches + jnp.sum(is_match, axis=1, dtype=jnp.int32)
+
+        mbuf = st.match_buf
+        if cfg.collect_matches > 0:
+            mcap = mbuf.shape[1]
+            # per-lane match ordinal within this step, on top of the
+            # pre-step per-worker match count
+            m_prefix = jnp.cumsum(is_match.astype(jnp.int32), axis=1) - is_match
+            m_slot = (st.matches[:, None] + m_prefix) % mcap
+            m_slot = jnp.where(is_match, m_slot, mcap)  # drop non-matches
+            vidx = jnp.arange(v_loc, dtype=jnp.int32)[:, None]
+            mbuf = mbuf.at[vidx, m_slot].set(map2, mode="drop")
+
+        parent_keep = pop.lane_on & jnp.any(cand2 != 0, axis=-1)
+        st_depth, st_map, st_used, st_cand, new_size = frontier.push_entries(
+            st.st_depth, st.st_map, st.st_used, st.st_cand, st.base, st.size,
+            pop.k, parent_keep, has_child,
+            pop.depth, pop.map, pop.used, cand2,
+            pop.depth + 1, map2, used2, child_cand,
+            store_used=cfg.store_used,
+        )
+        overflow = st.overflow | frontier.overflowed(new_size, s_cap)
+        return st._replace(
+            st_depth=st_depth, st_map=st_map, st_used=st_used, st_cand=st_cand,
+            size=new_size, matches=matches, states=states,
+            exp_depth=exp_depth, match_buf=mbuf, overflow=overflow,
+        )
+
+    return step

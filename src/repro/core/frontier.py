@@ -1,0 +1,343 @@
+"""Ring-buffer frontier stacks: the SoA state layer of the engine
+(DESIGN.md §6.1).
+
+Each of ``V`` workers owns a ring-buffer stack of search-tree entries in
+dense SoA arrays (:class:`EngineState`): an entry is ``(depth, mapping,
+used-bitmap, candidate-bitmap)`` and a task is one candidate bit.  This
+module owns everything that touches the *stack structure* — popping the
+top ``expand_width`` entries, pushing surviving parents below freshly
+created children, ring compaction, and overflow accounting — and knows
+nothing about *what* an expansion computes (that is `repro.core.extend`,
+behind the ``StepBackend`` seam) or how rounds are driven
+(`repro.core.engine`).
+
+All ops are batched over the leading worker axis (no ``vmap``): under
+``shard_map`` the caller holds the local ``V / D`` shard and every op here
+stays worker-local, so the same code serves the single-device and mesh
+paths (DESIGN.md §2.4).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec
+
+from repro.core.graph import WORD_BITS, bitmap_from_indices
+from repro.core.plan import SearchPlan
+
+if TYPE_CHECKING:  # engine imports extend imports frontier; avoid the cycle
+    from repro.core.engine import EngineConfig
+
+
+class EngineState(NamedTuple):
+    st_depth: jnp.ndarray  # [V, S] int32
+    st_map: jnp.ndarray  # [V, S, P] int32
+    st_used: jnp.ndarray  # [V, S, W] uint32
+    st_cand: jnp.ndarray  # [V, S, W] uint32
+    base: jnp.ndarray  # [V] int32 ring-buffer base
+    size: jnp.ndarray  # [V] int32
+    matches: jnp.ndarray  # [V] int32
+    states: jnp.ndarray  # [V] int32
+    exp_depth: jnp.ndarray  # [V] int32 summed depth of expanded entries
+    steals: jnp.ndarray  # [V] int32 entries received
+    steal_depth: jnp.ndarray  # [V] int32 summed depth of stolen entries
+    steal_rounds: jnp.ndarray  # [] int32 rounds with any transfer
+    steps: jnp.ndarray  # [] int32
+    overflow: jnp.ndarray  # [] bool — stack high-watermark breached
+    match_buf: jnp.ndarray  # [V, Mcap, P] int32 (Mcap >= 1)
+
+
+class Popped(NamedTuple):
+    """Top-of-stack lanes selected by :func:`pop_top_k`.
+
+    Off lanes (``lane_on == False``) carry zeroed depth/candidates so the
+    expansion backend never has to re-check the lane mask for validity.
+    """
+
+    depth: jnp.ndarray  # [V, E] int32 (0 on off lanes)
+    map: jnp.ndarray  # [V, E, P] int32
+    used: jnp.ndarray  # [V, E, W] uint32 (materialized even w/o store_used)
+    cand: jnp.ndarray  # [V, E, W] uint32 (0 on off lanes)
+    lane_on: jnp.ndarray  # [V, E] bool
+    k: jnp.ndarray  # [V] int32 entries actually popped per worker
+
+
+def used_from_map(map_: jnp.ndarray, depth: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Reconstruct one entry's used-bitmap from mapped targets at positions
+    < depth (the ``store_used=False`` stack representation)."""
+    p_pad = map_.shape[0]
+
+    def body(j, u):
+        valid = (j < depth) & (map_[j] >= 0)
+        t = jnp.maximum(map_[j], 0)
+        word = t // WORD_BITS
+        bit = jnp.where(valid, jnp.uint32(1) << (t % WORD_BITS).astype(jnp.uint32),
+                        jnp.uint32(0))
+        return u.at[word].set(u[word] | bit)
+
+    return lax.fori_loop(0, p_pad, body, jnp.zeros((w,), jnp.uint32))
+
+
+def pop_top_k(
+    st_depth: jnp.ndarray,
+    st_map: jnp.ndarray,
+    st_used: jnp.ndarray,
+    st_cand: jnp.ndarray,
+    base: jnp.ndarray,
+    size: jnp.ndarray,
+    expand_width: int,
+    store_used: bool = True,
+) -> Popped:
+    """Select each worker's top ``expand_width`` entries (top-first lanes).
+
+    ``k = min(size, expand_width, free_space)`` per worker — the capacity
+    guard: a worker never pops more than it could push back (each popped
+    entry re-emits at most a parent + a child, net growth ≤ k), so a full
+    ring (``free_space == 0``) freezes rather than corrupts.  Popping is
+    logical only — ``size`` is adjusted by the subsequent
+    :func:`push_entries`, which reuses the vacated slots.
+    """
+    v_loc, s_cap = st_depth.shape
+    w = st_cand.shape[2]
+    e = expand_width
+
+    space = s_cap - size
+    k = jnp.minimum(jnp.minimum(size, e), space).astype(jnp.int32)
+    lane = jnp.arange(e, dtype=jnp.int32)[None, :]
+    lane_on = lane < k[:, None]
+    pos = size[:, None] - 1 - lane  # top-first
+    slot = jnp.where(lane_on, (base[:, None] + pos) % s_cap, 0)
+    vidx = jnp.arange(v_loc, dtype=jnp.int32)[:, None]
+
+    depth = jnp.where(lane_on, st_depth[vidx, slot], 0)
+    cand = jnp.where(lane_on[..., None], st_cand[vidx, slot], jnp.uint32(0))
+    map_ = st_map[vidx, slot]
+    if store_used:
+        used = st_used[vidx, slot]
+    else:
+        used = jax.vmap(jax.vmap(lambda m, d: used_from_map(m, d, w)))(map_, depth)
+    return Popped(depth, map_, used, cand, lane_on, k)
+
+
+def push_entries(
+    st_depth: jnp.ndarray,
+    st_map: jnp.ndarray,
+    st_used: jnp.ndarray,
+    st_cand: jnp.ndarray,
+    base: jnp.ndarray,
+    size: jnp.ndarray,
+    k: jnp.ndarray,
+    parent_keep: jnp.ndarray,  # [V, E] parents with remaining candidates
+    has_child: jnp.ndarray,  # [V, E] lanes that emitted a live child
+    p_depth: jnp.ndarray,  # parent re-push payload ([V, E] / [V, E, ...])
+    p_map: jnp.ndarray,
+    p_used: jnp.ndarray,
+    p_cand: jnp.ndarray,
+    c_depth: jnp.ndarray,  # child payload
+    c_map: jnp.ndarray,
+    c_used: jnp.ndarray,
+    c_cand: jnp.ndarray,
+    store_used: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Push surviving parents below their fresh children, lanes k-1 .. 0.
+
+    Emission is reversed-lane (lane k-1 first) so lane 0 — the deepest,
+    top-of-stack entry — ends back on top: per-worker DFS order is
+    preserved across steps.  Slots are assigned by a per-worker prefix sum
+    over ``(parent_keep, has_child)``; invalid lanes address slot
+    ``s_cap`` and are dropped by the scatter.  Returns the updated stack
+    arrays and the new ``size``.
+    """
+    v_loc, s_cap = st_depth.shape
+    e = parent_keep.shape[1]
+    lane = jnp.arange(e, dtype=jnp.int32)
+    rev = e - 1 - lane  # reversal is its own inverse
+    pk_r = parent_keep[:, rev]
+    hc_r = has_child[:, rev]
+    per_lane = pk_r.astype(jnp.int32) + hc_r.astype(jnp.int32)
+    offs = jnp.cumsum(per_lane, axis=1) - per_lane  # first push of lane rev[i]
+    parent_out = jnp.where(pk_r, offs, -1)[:, rev]
+    child_out = jnp.where(hc_r, offs + pk_r.astype(jnp.int32), -1)[:, rev]
+    total_push = jnp.sum(per_lane, axis=1)
+
+    new_size = size - k + total_push
+    push_base = size - k  # logical position of first pushed entry
+
+    def slots_for(out_pos):
+        slot = (base[:, None] + push_base[:, None] + out_pos) % s_cap
+        return jnp.where(out_pos >= 0, slot, s_cap)
+
+    p_slots = slots_for(parent_out)
+    c_slots = slots_for(child_out)
+    vidx = jnp.arange(v_loc, dtype=jnp.int32)[:, None]
+
+    st_depth = st_depth.at[vidx, p_slots].set(p_depth, mode="drop")
+    st_map = st_map.at[vidx, p_slots].set(p_map, mode="drop")
+    st_cand = st_cand.at[vidx, p_slots].set(p_cand, mode="drop")
+
+    st_depth = st_depth.at[vidx, c_slots].set(c_depth, mode="drop")
+    st_map = st_map.at[vidx, c_slots].set(c_map, mode="drop")
+    st_cand = st_cand.at[vidx, c_slots].set(c_cand, mode="drop")
+
+    if store_used:
+        st_used = st_used.at[vidx, p_slots].set(p_used, mode="drop")
+        st_used = st_used.at[vidx, c_slots].set(c_used, mode="drop")
+
+    return st_depth, st_map, st_used, st_cand, new_size
+
+
+def compact(
+    st_depth: jnp.ndarray,
+    st_map: jnp.ndarray,
+    st_used: jnp.ndarray,
+    st_cand: jnp.ndarray,
+    base: jnp.ndarray,
+    size: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Rotate every ring so its logical bottom lands in slot 0 (base → 0).
+
+    Entry order and contents are unchanged — only the physical layout.
+    Steal rounds don't need this (they address slots modulo ``s_cap``),
+    but backends that want contiguous stack segments (the sparse-CSR
+    direction in ROADMAP.md) and state re-initialization do.
+    """
+    v_loc, s_cap = st_depth.shape
+    j = jnp.arange(s_cap, dtype=jnp.int32)[None, :]
+    slot = (base[:, None] + j) % s_cap
+    vidx = jnp.arange(v_loc, dtype=jnp.int32)[:, None]
+    return (
+        st_depth[vidx, slot],
+        st_map[vidx, slot],
+        st_used[vidx, slot],
+        st_cand[vidx, slot],
+        jnp.zeros_like(base),
+        size,
+    )
+
+
+def overflowed(size: jnp.ndarray, s_cap: int) -> jnp.ndarray:
+    """High-watermark check: a completely full ring (``size == s_cap``)
+    counts as overflow — the pop guard then freezes the worker, silently
+    undercounting, which is why the session retries with a doubled cap
+    (`repro.core.session.Enumerator.run`)."""
+    return jnp.any(size > s_cap - 1)
+
+
+# ---------------------------------------------------------------------------
+# state construction / sharding metadata
+# ---------------------------------------------------------------------------
+
+def init_state(plan: SearchPlan, cfg: "EngineConfig") -> EngineState:
+    """Initial work distribution (paper §3.3): depth-0 candidates are split
+    into equal contiguous target-node ranges, one root entry per worker."""
+    v = cfg.n_workers
+    p_pad, w = plan.p_pad, plan.w
+    s_cap = cfg.resolved_stack_cap(p_pad)
+    mcap = max(1, cfg.collect_matches)
+
+    splits = np.linspace(0, plan.n_t, v + 1).astype(np.int64)
+    root_cands = np.zeros((v, w), dtype=np.uint32)
+    for kk in range(v):
+        idx = np.arange(splits[kk], splits[kk + 1])
+        if idx.size:
+            root_cands[kk] = bitmap_from_indices(idx, plan.n_t, w) & plan.dom_bits[0]
+    if not plan.satisfiable:
+        root_cands[:] = 0
+
+    st_depth = np.zeros((v, s_cap), dtype=np.int32)
+    st_map = np.full((v, s_cap, p_pad), -1, dtype=np.int32)
+    st_used = np.zeros((v, s_cap, w if cfg.store_used else 1), dtype=np.uint32)
+    st_cand = np.zeros((v, s_cap, w), dtype=np.uint32)
+    st_cand[:, 0] = root_cands
+    size = (root_cands.any(axis=1)).astype(np.int32)
+
+    return EngineState(
+        st_depth=jnp.asarray(st_depth),
+        st_map=jnp.asarray(st_map),
+        st_used=jnp.asarray(st_used),
+        st_cand=jnp.asarray(st_cand),
+        base=jnp.zeros((v,), jnp.int32),
+        size=jnp.asarray(size),
+        matches=jnp.zeros((v,), jnp.int32),
+        states=jnp.zeros((v,), jnp.int32),
+        exp_depth=jnp.zeros((v,), jnp.int32),
+        steals=jnp.zeros((v,), jnp.int32),
+        steal_depth=jnp.zeros((v,), jnp.int32),
+        steal_rounds=jnp.zeros((), jnp.int32),
+        steps=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.bool_),
+        match_buf=jnp.full((v, mcap, p_pad), -1, jnp.int32),
+    )
+
+
+def state_partition_specs(axis: str) -> EngineState:
+    """PartitionSpecs for :class:`EngineState`: worker-axis arrays sharded
+    over ``axis``, loop scalars replicated."""
+    P = PartitionSpec
+    return EngineState(
+        st_depth=P(axis, None),
+        st_map=P(axis, None, None),
+        st_used=P(axis, None, None),
+        st_cand=P(axis, None, None),
+        base=P(axis),
+        size=P(axis),
+        matches=P(axis),
+        states=P(axis),
+        exp_depth=P(axis),
+        steals=P(axis),
+        steal_depth=P(axis),
+        steal_rounds=P(),
+        steps=P(),
+        overflow=P(),
+        match_buf=P(axis, None, None),
+    )
+
+
+def abstract_engine_state(cfg: "EngineConfig", w: int, p_pad: int) -> EngineState:
+    """ShapeDtypeStructs for dry-run lowering without allocation."""
+    v = cfg.n_workers
+    s_cap = cfg.resolved_stack_cap(p_pad)
+    mcap = max(1, cfg.collect_matches)
+    w_used = w if cfg.store_used else 1
+    sds = jax.ShapeDtypeStruct
+    return EngineState(
+        st_depth=sds((v, s_cap), jnp.int32),
+        st_map=sds((v, s_cap, p_pad), jnp.int32),
+        st_used=sds((v, s_cap, w_used), jnp.uint32),
+        st_cand=sds((v, s_cap, w), jnp.uint32),
+        base=sds((v,), jnp.int32),
+        size=sds((v,), jnp.int32),
+        matches=sds((v,), jnp.int32),
+        states=sds((v,), jnp.int32),
+        exp_depth=sds((v,), jnp.int32),
+        steals=sds((v,), jnp.int32),
+        steal_depth=sds((v,), jnp.int32),
+        steal_rounds=sds((), jnp.int32),
+        steps=sds((), jnp.int32),
+        overflow=sds((), jnp.bool_),
+        match_buf=sds((v, mcap, p_pad), jnp.int32),
+    )
+
+
+STATE_LOGICAL = EngineState(
+    st_depth=("worker", None),
+    st_map=("worker", None, None),
+    st_used=("worker", None, "tensor"),
+    st_cand=("worker", None, "tensor"),
+    base=("worker",),
+    size=("worker",),
+    matches=("worker",),
+    states=("worker",),
+    exp_depth=("worker",),
+    steals=("worker",),
+    steal_depth=("worker",),
+    steal_rounds=(),
+    steps=(),
+    overflow=(),
+    match_buf=("worker", None, None),
+)

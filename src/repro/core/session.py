@@ -55,6 +55,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -244,6 +245,7 @@ class MatchSet:
     match_s: float
     plan: SearchPlan
     engine: EngineResult
+    retries: int = 0  # overflow retries spent (stack_cap doubled each time)
     _match_buf: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
     _materialize: Optional[Callable[[], Optional[np.ndarray]]] = dataclasses.field(
         default=None, repr=False
@@ -538,7 +540,15 @@ class Enumerator:
     # -- execution: single -------------------------------------------------
 
     def run(self, query: Union[Query, Graph], collect_matches: int = 0) -> MatchSet:
-        """Run one prepared query through the (cached) engine."""
+        """Run one prepared query through the (cached) engine.
+
+        A run whose stack high-watermark breached its ring capacity has
+        *undercounted* (full workers freeze instead of expanding), so an
+        ``overflow`` result is never returned silently: the query is
+        retried once with a doubled ``stack_cap`` (with a warning;
+        ``MatchSet.retries`` records it).  If the doubled cap still
+        overflows, a ``RuntimeError`` asks for an explicit budget.
+        """
         query = self._coerce(query)
         if not query.plan.satisfiable:
             return self._matchset(query, -1, _empty_engine_result(), 0.0)
@@ -546,18 +556,44 @@ class Enumerator:
         if collect_matches:
             cfg = dataclasses.replace(cfg, collect_matches=collect_matches)
         t0 = time.perf_counter()
+        res = self._run_single(cfg, query)
+        retries = 0
+        if res.overflow:
+            res = self._retry_overflowed(cfg, query)
+            retries = 1
+        match_s = time.perf_counter() - t0
+        return self._matchset(query, -1, res, match_s, retries=retries)
+
+    def _run_single(self, cfg: EngineConfig, query: Query) -> EngineResult:
+        """One engine invocation through the compile cache (no retry)."""
         fn = self._engine_fn(cfg, "single", 1, query)
         arrays = eng.make_plan_arrays(query.plan)
         state = eng.init_state(query.plan, cfg)
         final = jax.block_until_ready(fn(arrays, state))
-        res = eng.result_from_state(final, cfg)
-        match_s = time.perf_counter() - t0
+        return eng.result_from_state(final, cfg)
+
+    def _retry_overflowed(self, cfg: EngineConfig, query: Query) -> EngineResult:
+        """``cfg``'s run of ``query`` overflowed (undercounted): warn and
+        re-run once with a doubled ``stack_cap``; raise if even that
+        overflows.  Shared by run() and the pack path."""
+        cap = cfg.resolved_stack_cap(query.plan.p_pad)
+        warnings.warn(
+            f"query {query.name!r} overflowed its worker stacks "
+            f"(stack_cap={cap}); retrying once with stack_cap={2 * cap} — "
+            "set EngineConfig.stack_cap to avoid the duplicated work",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        res = self._run_single(
+            dataclasses.replace(cfg, stack_cap=2 * cap), query
+        )
         if res.overflow:
             raise RuntimeError(
-                "engine stack overflow — increase EngineConfig.stack_cap "
-                f"(current auto={cfg.resolved_stack_cap(query.plan.p_pad)})"
+                f"engine stack overflow persists at stack_cap={2 * cap} "
+                f"for query {query.name!r} — set an explicit "
+                "EngineConfig.stack_cap budget"
             )
-        return self._matchset(query, -1, res, match_s)
+        return res
 
     # -- execution: batch / stream ----------------------------------------
 
@@ -644,12 +680,20 @@ class Enumerator:
             lane = jax.tree.map(lambda x, r=row: x[r], final)
             res = eng.result_from_state(lane, cfg)
             if res.overflow:
-                raise RuntimeError(f"stack overflow in query {qs[i].name}")
+                # the pack undercounted this lane; go straight to the
+                # doubled-stack_cap single retry (re-running at the original
+                # cap would deterministically overflow again)
+                res = self._retry_overflowed(cfg, qs[i])
+                yield self._matchset(qs[i], i, res, match_s, retries=1)
+                continue
             yield self._matchset(qs[i], i, res, match_s)
 
     # -- result assembly ---------------------------------------------------
 
-    def _matchset(self, query: Query, idx: int, res: EngineResult, match_s: float) -> MatchSet:
+    def _matchset(
+        self, query: Query, idx: int, res: EngineResult, match_s: float,
+        retries: int = 0,
+    ) -> MatchSet:
         materialize = None
         if res.match_buf is None and query.plan.satisfiable:
             def materialize(q: Query = query, m: int = res.matches):
@@ -675,6 +719,7 @@ class Enumerator:
             match_s=match_s,
             plan=query.plan,
             engine=res,
+            retries=retries,
             _match_buf=res.match_buf,
             _materialize=materialize,
         )

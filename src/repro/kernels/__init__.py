@@ -7,8 +7,13 @@ Each kernel ships three layers:
                equality (bitwise kernels: exact; flash attention: rtol)
 
 Kernels:
-  candidate_mask   — the paper's hot loop: per-lane candidate bitmaps via
+  extend_step      — the paper's hot loop, fully fused (DESIGN.md §6.3):
+                     lowest-bit extraction + candidate AND-tree + match
+                     flagging in one pallas_call (the engine's
+                     step_backend="pallas")
+  candidate_mask   — per-lane candidate bitmaps only, via
                      scalar-prefetch-indexed adjacency-row DMA + wide AND
+                     (the step_backend="jnp" + use_pallas kerneling point)
   domain_ac        — RI-DS arc-consistency row filter (SDDMM-shaped)
   popcount_reduce  — per-row popcounts (domain sizes, match stats)
   flash_attention  — fused causal online-softmax attention (beyond-paper;

@@ -1,45 +1,78 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``INTERPRET`` defaults to True on CPU (this container) so the kernels
-execute their Python bodies for validation; on a TPU backend it flips to
-False automatically.
+Every wrapper resolves its execution mode through one helper,
+:func:`resolve_interpret`: on a TPU backend the kernels lower compiled,
+anywhere else they run in interpret mode (the kernel body executes as
+Python/jnp — validation, not speed).  The ``SGE_PALLAS_INTERPRET``
+environment variable overrides the autodetect in both directions
+(``1``/``true`` forces interpret, ``0``/``false`` forces compiled), and an
+explicit ``interpret=`` argument beats both.
 """
 
 from __future__ import annotations
+
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import candidate_mask as _cm
 from repro.kernels import domain_ac as _ac
+from repro.kernels import extend_step as _es
 from repro.kernels import popcount_reduce as _pc
 from repro.kernels import ref as kref
 
+# Kept for callers that want the process default at import time; prefer
+# resolve_interpret(), which also honors the env override per call.
 INTERPRET = jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """The one interpret-mode decision point for every kernel wrapper.
+
+    Precedence: explicit ``interpret=`` argument > ``SGE_PALLAS_INTERPRET``
+    env var > backend autodetect (TPU → compiled, else interpret).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("SGE_PALLAS_INTERPRET", "").strip()
+    if env:  # set-but-empty falls through to the autodetect
+        return env.lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
 
 
 def candidate_mask(rows, dom_bits, pos, row_idx, used, interpret=None):
     """See `repro.kernels.candidate_mask.candidate_mask`."""
-    it = INTERPRET if interpret is None else interpret
-    return _cm.candidate_mask(rows, dom_bits, pos, row_idx, used, interpret=it)
+    return _cm.candidate_mask(
+        rows, dom_bits, pos, row_idx, used, interpret=resolve_interpret(interpret)
+    )
+
+
+def extend_step(rows, dom_bits, child_pos, row_idx, depth, n_p, used, cand,
+                interpret=None):
+    """See `repro.kernels.extend_step.extend_step` (the fused engine step)."""
+    return _es.extend_step(
+        rows, dom_bits, child_pos, row_idx, depth, n_p, used, cand,
+        interpret=resolve_interpret(interpret),
+    )
 
 
 def adjacency_any(rows, mask, interpret=None):
     """See `repro.kernels.domain_ac.adjacency_any`."""
-    it = INTERPRET if interpret is None else interpret
-    return _ac.adjacency_any(rows, mask, interpret=it)
+    return _ac.adjacency_any(rows, mask, interpret=resolve_interpret(interpret))
 
 
 def arc_any_sweep(adj_flat, arc_row, masks, interpret=None):
     """See `repro.kernels.domain_ac.arc_any_sweep`."""
-    it = INTERPRET if interpret is None else interpret
-    return _ac.arc_any_sweep(adj_flat, arc_row, masks, interpret=it)
+    return _ac.arc_any_sweep(
+        adj_flat, arc_row, masks, interpret=resolve_interpret(interpret)
+    )
 
 
 def popcount_rows(bits, interpret=None):
     """See `repro.kernels.popcount_reduce.popcount_rows`."""
-    it = INTERPRET if interpret is None else interpret
-    return _pc.popcount_rows(bits, interpret=it)
+    return _pc.popcount_rows(bits, interpret=resolve_interpret(interpret))
 
 
 flatten_adj_rows = _cm.flatten_adj_rows

@@ -32,6 +32,59 @@ def candidate_mask_ref(
     return lax.fori_loop(0, row_idx.shape[1], body, cand)
 
 
+def extend_step_ref(
+    rows: jnp.ndarray,  # [n_rows + 1, w] uint32 (last row all-ones neutral)
+    dom_bits: jnp.ndarray,  # [p_pad, w] uint32
+    child_pos: jnp.ndarray,  # [b] int32 order position of the child
+    row_idx: jnp.ndarray,  # [b, mp] int32 (unused slots -> n_rows)
+    depth: jnp.ndarray,  # [b] int32 depth of the popped entry
+    n_p: jnp.ndarray,  # scalar int32 actual pattern size
+    used: jnp.ndarray,  # [b, w] uint32
+    cand: jnp.ndarray,  # [b, w] uint32
+):
+    """Oracle for the fused expansion step `repro.kernels.extend_step`.
+
+    Per lane: extract the lowest set candidate bit ``v`` (``cand2`` is the
+    residual), build ``child = dom[child_pos] ∧ ¬used ∧ ¬bit(v) ∧ ⋀_j
+    rows[row_idx[:, j]]``, zero it unless a child is wanted, and emit
+    ``meta = (valid, v, is_match, has_child)`` int32 columns (``v`` is -1
+    on invalid lanes).  Returns ``(cand2, child_cand, meta)``.
+    """
+    b, w = cand.shape
+    nz = cand != 0
+    valid = jnp.any(nz, axis=-1)
+    widx = jnp.argmax(nz, axis=-1)  # first non-zero word (0 if none)
+    word = jnp.take_along_axis(cand, widx[:, None], axis=-1)[:, 0]
+    tz = lax.population_count(~word & (word - jnp.uint32(1)))
+    v = widx.astype(jnp.int32) * 32 + tz.astype(jnp.int32)
+    lowbit = word & (~word + jnp.uint32(1))
+    sel = (jnp.arange(w)[None, :] == widx[:, None]) & valid[:, None]
+    vmask = jnp.where(sel, lowbit[:, None], jnp.uint32(0))
+    cand2 = cand ^ vmask
+
+    child = dom_bits[child_pos] & ~used & ~vmask
+
+    def body(j, c):
+        return c & rows[row_idx[:, j]]
+
+    if row_idx.shape[1]:  # fori_loop traces its body even for zero trips
+        child = lax.fori_loop(0, row_idx.shape[1], body, child)
+    is_match = valid & (depth + 1 >= n_p)
+    want_child = valid & ~is_match
+    child = jnp.where(want_child[:, None], child, jnp.uint32(0))
+    has_child = want_child & jnp.any(child != 0, axis=-1)
+    meta = jnp.stack(
+        [
+            valid.astype(jnp.int32),
+            jnp.where(valid, v, -1),
+            is_match.astype(jnp.int32),
+            has_child.astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    return cand2, child, meta
+
+
 def adjacency_any_ref(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Per-row "does ``rows[t] ∧ mask`` have any set bit" — the inner test of
     RI-DS arc consistency.  Returns ``[n_t]`` int32 in {0, 1}."""

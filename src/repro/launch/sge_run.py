@@ -15,6 +15,11 @@ Three execution modes map to the session's three methods:
   * ``--mode stream``   results printed as packs drain (``stream``; the
     serving path).
 
+``--step-backend pallas`` swaps the engine's expansion step for the fused
+Pallas ``extend_step`` kernel (DESIGN.md §6.2) — results are bit-identical
+to the default ``jnp`` backend; off-TPU the kernel runs in interpret mode
+(validation, not speed — see API.md).
+
 ``--devices N`` runs the paper's worker sweep multi-device: the session's
 worker stacks shard over a 1-D ``data`` mesh of ``N`` devices
 (``shard_map``; DESIGN.md §2.4).  On a CPU-only host the flag forces ``N``
@@ -83,6 +88,10 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=0,
                     help="shard worker stacks over N devices (0 = no mesh; "
                     "on CPU forces N virtual XLA devices)")
+    ap.add_argument("--step-backend", choices=("jnp", "pallas"), default="jnp",
+                    help="expansion-step backend (DESIGN.md §6.2): 'jnp' "
+                    "loose ops, 'pallas' the fused extend_step kernel "
+                    "(interpret mode off-TPU — validation, not speed)")
     args = ap.parse_args()
     mode = "packed" if args.packed else args.mode
 
@@ -99,7 +108,8 @@ def main() -> int:
         args.collection, pattern_edges=(8, 16, 24), patterns_per_target=2,
         scale=args.scale, seed=args.seed,
     )
-    cfg = EngineConfig(n_workers=args.workers, expand_width=args.expand)
+    cfg = EngineConfig(n_workers=args.workers, expand_width=args.expand,
+                       step_backend=args.step_backend)
     session = Enumerator(config=cfg, variant=args.variant, mesh=mesh)
 
     indices: dict = {}
@@ -144,7 +154,7 @@ def main() -> int:
 
     total = time.perf_counter() - t0
     info = session.cache_info()
-    print(f"\n[{args.collection}/{mode}] {len(queries)} queries, "
+    print(f"\n[{args.collection}/{mode}/{args.step_backend}] {len(queries)} queries, "
           f"{matches} matches, {states} states, {total:.1f}s "
           f"({states/max(total,1e-9):.0f} states/s); "
           f"engine compiles={info['compiles']} cache_hits={info['cache_hits']}")

@@ -1,0 +1,221 @@
+"""The StepBackend seam (DESIGN.md §6.2) and the fused Pallas extend-step
+kernel (§6.3).
+
+Three layers of evidence that the fused step is the loose-ops step:
+
+* kernel vs pure-jnp oracle (`extend_step_ref`), shape/dtype sweeps —
+  bit-exact;
+* jnp vs pallas-interpret **backends** produce bit-identical
+  :class:`EngineState` pytrees (stacks, counters, match buffers) over
+  random plans/configs — the hypothesis property test;
+* whole-engine runs (single-device and mesh-sharded — the multi-device
+  test runs in CI's 4-virtual-device job) agree counter-for-counter.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Enumerator, SubgraphIndex
+from repro.core import engine as eng
+from repro.core import extend
+from repro.core.graph import PackedGraph
+from repro.core.plan import build_plan
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from tests.conftest import extract_connected_pattern, random_graph
+
+SHAPES_ES = [
+    # (b, w, mp, n_rows, p_pad)
+    (1, 1, 1, 2, 1),
+    (4, 3, 2, 10, 5),
+    (16, 130, 4, 64, 8),
+    (8, 128, 8, 32, 64),
+    (32, 257, 6, 100, 16),
+    (64, 13, 0, 7, 4),  # mp == 0: degenerate parent-free plans
+]
+
+
+@pytest.mark.parametrize("b,w,mp,n_rows,p_pad", SHAPES_ES)
+def test_extend_step_kernel_vs_oracle(rng, b, w, mp, n_rows, p_pad):
+    rows = np.concatenate(
+        [
+            rng.integers(0, 2**32, (n_rows, w), dtype=np.uint32),
+            np.full((1, w), 0xFFFFFFFF, np.uint32),
+        ],
+        0,
+    )
+    dom = rng.integers(0, 2**32, (p_pad, w), dtype=np.uint32)
+    child_pos = rng.integers(0, p_pad, b).astype(np.int32)
+    row_idx = rng.integers(0, n_rows + 1, (b, mp)).astype(np.int32)
+    depth = rng.integers(0, p_pad, b).astype(np.int32)
+    n_p = np.int32(p_pad // 2 + 1)
+    used = rng.integers(0, 2**32, (b, w), dtype=np.uint32)
+    # mix of empty, sparse, and dense candidate bitmaps
+    cand = rng.integers(0, 2**32, (b, w), dtype=np.uint32)
+    cand[:: 3] = 0
+    args = [jnp.asarray(x) for x in (rows, dom, child_pos, row_idx, depth,
+                                     n_p, used, cand)]
+    got = ops.extend_step(*args)
+    want = kref.extend_step_ref(*args)
+    for g, wnt, name in zip(got, want, ("cand2", "child_cand", "meta")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wnt), err_msg=name)
+
+
+def _case(rng, n=40, m=120, pat_n=5, **graph_kw):
+    tgt = random_graph(rng, n, m, n_labels=3, **graph_kw)
+    pat = extract_connected_pattern(rng, tgt, pat_n)
+    return tgt, pat
+
+
+def _cfg_pair(**kw):
+    a = EngineConfig(step_backend="jnp", **kw)
+    b = EngineConfig(step_backend="pallas", **kw)
+    return a, b
+
+
+def _assert_results_identical(a, b):
+    assert (a.matches, a.states, a.steps, a.steals, a.steal_rounds) == (
+        b.matches, b.states, b.steps, b.steals, b.steal_rounds,
+    )
+    np.testing.assert_array_equal(a.per_worker_states, b.per_worker_states)
+    np.testing.assert_array_equal(a.per_worker_matches, b.per_worker_matches)
+    np.testing.assert_array_equal(a.per_worker_steals, b.per_worker_steals)
+
+
+def test_engine_backends_identical_end_to_end(rng):
+    """Whole runs agree counter-for-counter, mappings included."""
+    tgt, pat = _case(rng)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt))
+    cfg_j, cfg_p = _cfg_pair(n_workers=4, expand_width=2, collect_matches=64)
+    a = eng.run(plan, cfg_j)
+    b = eng.run(plan, cfg_p)
+    _assert_results_identical(a, b)
+    np.testing.assert_array_equal(a.match_buf, b.match_buf)
+
+
+def test_engine_backends_identical_store_used_false(rng):
+    tgt, pat = _case(rng)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt))
+    cfg_j, cfg_p = _cfg_pair(n_workers=4, expand_width=2, store_used=False)
+    _assert_results_identical(eng.run(plan, cfg_j), eng.run(plan, cfg_p))
+
+
+def test_session_threads_step_backend(rng):
+    """step_backend= flows through Enumerator kwargs; configs with
+    different backends must not share a compile-cache entry."""
+    tgt, pat = _case(rng)
+    idx = SubgraphIndex.build(tgt)
+    a = Enumerator(idx, n_workers=2, expand_width=2)
+    b = Enumerator(idx, n_workers=2, expand_width=2, step_backend="pallas")
+    assert b.config.step_backend == "pallas"
+    ra = a.run(a.prepare(pat))
+    rb = b.run(b.prepare(pat))
+    assert (ra.matches, ra.states, ra.steps) == (rb.matches, rb.states, rb.steps)
+
+
+def test_unknown_step_backend_rejected():
+    with pytest.raises(ValueError):
+        EngineConfig(step_backend="bogus")
+
+
+def test_resolve_interpret_env_override(monkeypatch):
+    monkeypatch.delenv("SGE_PALLAS_INTERPRET", raising=False)
+    default = ops.resolve_interpret(None)
+    assert default == (jax.default_backend() != "tpu")
+    monkeypatch.setenv("SGE_PALLAS_INTERPRET", "0")
+    assert ops.resolve_interpret(None) is False
+    monkeypatch.setenv("SGE_PALLAS_INTERPRET", "1")
+    assert ops.resolve_interpret(None) is True
+    # set-but-empty (the `VAR= cmd` clearing idiom) falls back to autodetect
+    monkeypatch.setenv("SGE_PALLAS_INTERPRET", "")
+    assert ops.resolve_interpret(None) == default
+    # explicit argument beats the env
+    assert ops.resolve_interpret(False) is False
+    assert ops.resolve_interpret(True) is True
+
+
+# ---------------------------------------------------------------------------
+# property test: backends produce bit-identical step states
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment without hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        expand_width=st.integers(1, 4),
+        n_workers=st.integers(1, 4),
+        store_used=st.booleans(),
+        collect=st.booleans(),
+        n_steps=st.integers(1, 6),
+    )
+    def test_step_backends_bit_identical_states(
+        seed, expand_width, n_workers, store_used, collect, n_steps
+    ):
+        """jnp and pallas-interpret step backends must produce bit-identical
+        EngineState pytrees — stacks, ring bookkeeping, counters, and match
+        buffers — after any number of shared expansion steps."""
+        rng = np.random.default_rng(seed)
+        tgt = random_graph(rng, 16, 40, n_labels=2,
+                           selfloops=int(rng.integers(0, 3)))
+        pat = extract_connected_pattern(rng, tgt, int(rng.integers(3, 6)))
+        if pat.m == 0:
+            return
+        plan = build_plan(pat, PackedGraph.from_graph(tgt))
+        kw = dict(
+            n_workers=n_workers,
+            expand_width=expand_width,
+            store_used=store_used,
+            collect_matches=8 if collect else 0,
+        )
+        cfg_j, cfg_p = _cfg_pair(**kw)
+        arrays = eng.make_plan_arrays(plan)
+
+        def run_steps(cfg):
+            step = jax.jit(extend.make_step_fn(cfg, arrays))
+            state = eng.init_state(plan, cfg)
+            for _ in range(n_steps):
+                state = step(state)
+            return state
+
+        sj = run_steps(cfg_j)
+        sp = run_steps(cfg_p)
+        for name, a, b in zip(eng.EngineState._fields, sj, sp):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"StepState field {name}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# mesh path through the shared step (runs in CI's 4-virtual-device job)
+# ---------------------------------------------------------------------------
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+)
+
+
+@multi_device
+def test_mesh_path_uses_shared_step_both_backends(rng):
+    """Sharding over 2 devices with either backend changes nothing: the
+    mesh driver calls the same shared step as the single-device path."""
+    tgt, pat = _case(rng, n=48, m=160)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt))
+    mesh = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+    for backend in ("jnp", "pallas"):
+        cfg = EngineConfig(n_workers=4, expand_width=2, step_backend=backend)
+        ref = eng.run(plan, cfg)
+        sh = eng.run(plan, cfg, mesh=mesh)
+        _assert_results_identical(ref, sh)

@@ -1,0 +1,150 @@
+"""Ring-buffer frontier ops (DESIGN.md §6.1): edge cases the engine's hot
+loop silently relies on — empty pops, full rings, cap-1 stacks, wraparound
+— plus the pop/push round-trip invariant."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frontier
+
+
+def _ring(rng, v=2, s_cap=8, p=4, w=2, base=None, size=None):
+    """Random stack arrays with controllable base/size."""
+    st_depth = jnp.asarray(rng.integers(0, 5, (v, s_cap)), jnp.int32)
+    st_map = jnp.asarray(rng.integers(-1, 10, (v, s_cap, p)), jnp.int32)
+    st_used = jnp.asarray(rng.integers(0, 2**32, (v, s_cap, w), dtype=np.uint32))
+    st_cand = jnp.asarray(
+        rng.integers(1, 2**32, (v, s_cap, w), dtype=np.uint32)
+    )  # nonzero so popped lanes are valid
+    base = jnp.asarray(base if base is not None else np.zeros(v), jnp.int32)
+    size = jnp.asarray(size if size is not None else np.full(v, s_cap // 2), jnp.int32)
+    return st_depth, st_map, st_used, st_cand, base, size
+
+
+def test_empty_pop_is_inert(rng):
+    """size == 0: no lanes light up and payloads come back zeroed, so the
+    expansion backend sees only invalid lanes."""
+    arrs = _ring(rng, size=np.zeros(2))
+    pop = frontier.pop_top_k(*arrs, expand_width=4)
+    assert not bool(pop.lane_on.any())
+    assert int(pop.k.sum()) == 0
+    np.testing.assert_array_equal(np.asarray(pop.depth), 0)
+    np.testing.assert_array_equal(np.asarray(pop.cand), 0)
+
+
+def test_full_ring_freezes_and_flags(rng):
+    """size == s_cap: the capacity guard yields k = 0 (a frozen worker —
+    popping k lanes may push up to k net entries) and overflow reports."""
+    s_cap = 8
+    arrs = _ring(rng, s_cap=s_cap, size=np.full(2, s_cap))
+    pop = frontier.pop_top_k(*arrs, expand_width=4)
+    assert int(pop.k.sum()) == 0 and not bool(pop.lane_on.any())
+    assert bool(frontier.overflowed(arrs[5], s_cap))
+    assert not bool(frontier.overflowed(jnp.asarray([s_cap - 1, 0]), s_cap))
+
+
+def test_cap_one_stack_can_never_expand(rng):
+    """stack_cap == 1 with one entry: zero free space ⇒ k = 0 forever.
+    The engine treats this as overflow (size > s_cap - 1 ... not here:
+    size == 1 == s_cap), which the overflowed() watermark catches — the
+    driver aborts instead of spinning (engine._engine_loop)."""
+    arrs = _ring(rng, s_cap=1, size=np.ones(2))
+    pop = frontier.pop_top_k(*arrs, expand_width=4)
+    assert int(pop.k.sum()) == 0
+    assert bool(frontier.overflowed(arrs[5], 1))
+
+
+def test_pop_push_roundtrip_preserves_stack(rng):
+    """Popping k entries and re-pushing them all as surviving parents (no
+    children) must reproduce the stack exactly — contents, size, and DFS
+    order — including across the ring-wraparound boundary."""
+    v, s_cap, e = 3, 6, 4
+    base = np.array([0, 4, 5])  # worker 2's entries wrap around the ring
+    size = np.array([2, 4, 3])
+    arrs = _ring(rng, v=v, s_cap=s_cap, base=base, size=size)
+    st_depth, st_map, st_used, st_cand = arrs[:4]
+    pop = frontier.pop_top_k(*arrs, expand_width=e)
+    np.testing.assert_array_equal(np.asarray(pop.k), np.minimum(size, np.minimum(e, s_cap - size)))
+
+    parent_keep = pop.lane_on
+    has_child = jnp.zeros_like(parent_keep)
+    zeros3 = jnp.zeros_like(pop.used)
+    out = frontier.push_entries(
+        st_depth, st_map, st_used, st_cand, arrs[4], arrs[5],
+        pop.k, parent_keep, has_child,
+        pop.depth, pop.map, pop.used, pop.cand,
+        pop.depth + 1, pop.map, zeros3, zeros3,
+    )
+    nd, nm, nu, nc, new_size = out
+    np.testing.assert_array_equal(np.asarray(new_size), size)
+    # every logical position must hold the same entry as before
+    for wk in range(v):
+        for j in range(size[wk]):
+            slot = (base[wk] + j) % s_cap
+            np.testing.assert_array_equal(np.asarray(nd)[wk, slot],
+                                          np.asarray(st_depth)[wk, slot])
+            np.testing.assert_array_equal(np.asarray(nc)[wk, slot],
+                                          np.asarray(st_cand)[wk, slot])
+            np.testing.assert_array_equal(np.asarray(nm)[wk, slot],
+                                          np.asarray(st_map)[wk, slot])
+            np.testing.assert_array_equal(np.asarray(nu)[wk, slot],
+                                          np.asarray(st_used)[wk, slot])
+
+
+def test_push_drops_nothing_until_capacity(rng):
+    """Parents + children from a k-entry pop fit by construction
+    (k ≤ free space and net growth ≤ k): new_size never exceeds s_cap."""
+    v, s_cap, e = 2, 5, 4
+    size = np.array([4, 1])
+    arrs = _ring(rng, v=v, s_cap=s_cap, size=size)
+    pop = frontier.pop_top_k(*arrs, expand_width=e)
+    ones = pop.lane_on
+    out = frontier.push_entries(
+        *arrs[:6], pop.k, ones, ones,
+        pop.depth, pop.map, pop.used, pop.cand,
+        pop.depth + 1, pop.map, pop.used, pop.cand,
+    )
+    new_size = np.asarray(out[4])
+    assert (new_size <= s_cap).all()
+    np.testing.assert_array_equal(new_size, size + np.asarray(pop.k))
+
+
+def test_compact_rebases_without_reordering(rng):
+    """compact() rotates each ring so base becomes 0; the logical entry
+    sequence is untouched."""
+    v, s_cap = 2, 6
+    base = np.array([3, 5])
+    size = np.array([4, 6])
+    arrs = _ring(rng, v=v, s_cap=s_cap, base=base, size=size)
+    nd, nm, nu, nc, nb, ns = frontier.compact(*arrs)
+    np.testing.assert_array_equal(np.asarray(nb), 0)
+    np.testing.assert_array_equal(np.asarray(ns), size)
+    for wk in range(v):
+        for j in range(size[wk]):
+            old = (base[wk] + j) % s_cap
+            np.testing.assert_array_equal(np.asarray(nd)[wk, j],
+                                          np.asarray(arrs[0])[wk, old])
+            np.testing.assert_array_equal(np.asarray(nm)[wk, j],
+                                          np.asarray(arrs[1])[wk, old])
+            np.testing.assert_array_equal(np.asarray(nu)[wk, j],
+                                          np.asarray(arrs[2])[wk, old])
+            np.testing.assert_array_equal(np.asarray(nc)[wk, j],
+                                          np.asarray(arrs[3])[wk, old])
+
+
+def test_store_used_false_reconstructs_used(rng):
+    """With store_used=False the pop materializes used-bitmaps from the
+    mapping prefix; spot-check against a hand-built mapping."""
+    v, s_cap, p, w = 1, 4, 4, 2
+    st_depth = jnp.asarray(np.full((v, s_cap), 2), jnp.int32)
+    st_map = jnp.full((v, s_cap, p), -1, jnp.int32)
+    st_map = st_map.at[0, :, 0].set(3).at[0, :, 1].set(33)  # bits 3 and 33
+    st_used = jnp.zeros((v, s_cap, 1), jnp.uint32)  # collapsed when unused
+    st_cand = jnp.ones((v, s_cap, w), jnp.uint32)
+    base = jnp.zeros((v,), jnp.int32)
+    size = jnp.ones((v,), jnp.int32)
+    pop = frontier.pop_top_k(st_depth, st_map, st_used, st_cand, base, size,
+                             expand_width=2, store_used=False)
+    got = np.asarray(pop.used)[0, 0]
+    np.testing.assert_array_equal(got, np.array([1 << 3, 1 << 1], np.uint32))

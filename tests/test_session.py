@@ -182,3 +182,53 @@ def test_index_picklable_and_reusable(rng):
     b = Enumerator(index2, config=CFG)
     pa, pb = a.prepare(pats[0]), b.prepare(pats[0])
     assert (a.run(pa).matches, a.run(pa).states) == (b.run(pb).matches, b.run(pb).states)
+
+
+def test_overflow_retries_once_with_doubled_cap(rng):
+    """A stack_cap too small for the query must not silently undercount:
+    run() aborts the overflowed run, warns, retries once with a doubled
+    cap, and reports identical counts to a roomy run (retries=1)."""
+    tgt = random_graph(rng, 40, 120, n_labels=2)
+    pat = extract_connected_pattern(rng, tgt, 6)
+    index = SubgraphIndex.build(tgt)
+    roomy = Enumerator(index, n_workers=2, expand_width=2)
+    ref = roomy.run(roomy.prepare(pat))
+    assert ref.retries == 0
+
+    tight = Enumerator(index, n_workers=2, expand_width=2, stack_cap=8)
+    with pytest.warns(RuntimeWarning, match="overflowed"):
+        ms = tight.run(tight.prepare(pat))
+    assert ms.retries == 1
+    assert (ms.matches, ms.states) == (ref.matches, ref.states)
+
+
+def test_overflow_retry_in_batch_path(rng):
+    """An overflowed pack lane goes straight to the doubled-cap single
+    retry; its MatchSet reports retries=1 and correct counts."""
+    tgt = random_graph(rng, 40, 120, n_labels=2)
+    pat = extract_connected_pattern(rng, tgt, 6)
+    small = extract_connected_pattern(rng, tgt, 3)
+    index = SubgraphIndex.build(tgt)
+    roomy = Enumerator(index, n_workers=2, expand_width=2)
+    ref = {q.name: roomy.run(q).matches
+           for q in [roomy.prepare(pat, name="big"), roomy.prepare(small, name="small")]}
+
+    tight = Enumerator(index, n_workers=2, expand_width=2, stack_cap=8)
+    qs = [tight.prepare(pat, name="big"), tight.prepare(small, name="small")]
+    with pytest.warns(RuntimeWarning, match="overflowed"):
+        out = tight.run_batch(qs)
+    by_name = {ms.name: ms for ms in out}
+    assert by_name["big"].retries == 1
+    assert {n: ms.matches for n, ms in by_name.items()} == ref
+
+
+def test_overflow_raises_when_doubled_cap_still_too_small(rng):
+    """If the doubled cap overflows too, the session refuses to guess
+    further and demands an explicit budget."""
+    tgt = random_graph(rng, 40, 120, n_labels=2)
+    pat = extract_connected_pattern(rng, tgt, 6)
+    s = Enumerator(SubgraphIndex.build(tgt), n_workers=2, expand_width=2,
+                   stack_cap=3)
+    with pytest.warns(RuntimeWarning, match="overflowed"):
+        with pytest.raises(RuntimeError, match="stack overflow persists"):
+            s.run(s.prepare(pat))
