@@ -23,6 +23,7 @@ bookkeeping excluded), counted at 1 op per 32-bit word-lane.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict
 
@@ -55,6 +56,13 @@ COLLECTION_NT = {
     "sge_pdbsv1": 33067,
 }
 
+# The genuinely-sparse pdbsv1-class cell (DESIGN.md §6.4): same n_t, but the
+# adjacency is CSR planes sized for a mean degree of ~8 — the dense cells
+# above carry [n_elab, 2, n_t, w] bitmaps (~273 MB at this n_t per label
+# plane pair), which the csr step backend never materializes.
+SPARSE_AVG_DEG = 8
+SPARSE_DEG_CAP = 512
+
 
 def _w_for(n_t: int) -> int:
     return round_up((n_t + 31) // 32, 128)
@@ -81,6 +89,42 @@ def build_round(n_t: int, cfg: EngineConfig = ENGINE) -> CellBuild:
         logical=(eng.PLAN_LOGICAL, eng.STATE_LOGICAL),
         model_flops=float(flops),
         note=f"one engine round; n_t={n_t} w={w} V={cfg.n_workers} E={cfg.expand_width}",
+        donate=(1,),
+    )
+
+
+def build_csr_round(n_t: int, cfg: EngineConfig = ENGINE) -> CellBuild:
+    """One engine round through the sparse CSR step backend — the
+    >33k-node regime where the dense cells' ``[n_t, w]`` bitmap rows stop
+    fitting (ROADMAP: sparse-CSR extension backend)."""
+    cfg = dataclasses.replace(cfg, step_backend="csr")
+    w = _w_for(n_t)
+    nnz = 2 * n_t * SPARSE_AVG_DEG  # out + in planes
+    plan_abs = eng.abstract_csr_plan_arrays(
+        n_t, w, P_PAD, MAX_PARENTS, nnz=nnz, deg_cap=SPARSE_DEG_CAP,
+    )
+    state_abs = eng.abstract_engine_state(cfg, w, P_PAD)
+
+    def round_fn(plan, state):
+        return eng.make_round_fn(cfg, plan)(state)
+
+    # per lane per step: deg_cap-wide driver gather + dedupe, MAX_PARENTS
+    # binary searches of log2(deg_cap) compares each, and the w-word
+    # base/scatter work — all counted at 1 op per 32-bit word-lane.
+    log_deg = max(1, (SPARSE_DEG_CAP - 1).bit_length())
+    per_lane = SPARSE_DEG_CAP * (2 + MAX_PARENTS * log_deg) + 2 * w
+    flops = (
+        cfg.rebalance_interval * cfg.n_workers * cfg.expand_width * per_lane
+    )
+    return CellBuild(
+        fn=round_fn,
+        args=(plan_abs, state_abs),
+        logical=(eng.CSR_PLAN_LOGICAL, eng.STATE_LOGICAL),
+        model_flops=float(flops),
+        note=(
+            f"one csr engine round; n_t={n_t} nnz={nnz} "
+            f"deg_cap={SPARSE_DEG_CAP} V={cfg.n_workers} E={cfg.expand_width}"
+        ),
         donate=(1,),
     )
 
@@ -115,6 +159,17 @@ def smoke() -> Dict[str, float]:
     assert (res_sh.matches, res_sh.states) == (res.matches, res.states), (
         res_sh.matches, res_sh.states, res.matches, res.states,
     )
+    # the sparse CSR backend must reproduce the dense result bit-for-bit
+    # (the conformance suite covers the full matrix; this is the config
+    # smoke's one-query gate)
+    csr = Enumerator(
+        SubgraphIndex.build(tgt),
+        config=EngineConfig(n_workers=4, expand_width=4, step_backend="csr"),
+    )
+    res_csr = csr.run(csr.prepare(pat, name="smoke0-csr"))
+    assert (res_csr.matches, res_csr.states) == (res.matches, res.states), (
+        res_csr.matches, res_csr.states, res.matches, res.states,
+    )
     return {
         "matches": float(res.matches),
         "states": float(res.states),
@@ -128,8 +183,14 @@ ARCH = registry.register(
         family="sge",
         cfg=ENGINE,
         cells={
-            name: Cell("sge", name, "engine", functools.partial(build_round, nt))
-            for name, nt in COLLECTION_NT.items()
+            **{
+                name: Cell("sge", name, "engine", functools.partial(build_round, nt))
+                for name, nt in COLLECTION_NT.items()
+            },
+            "sge_pdbsv1_csr": Cell(
+                "sge", "sge_pdbsv1_csr", "engine",
+                functools.partial(build_csr_round, COLLECTION_NT["sge_pdbsv1"]),
+            ),
         },
         smoke=smoke,
         notes="The paper's contribution itself; see DESIGN.md §2 for the "

@@ -7,7 +7,9 @@ Layers:
   plan       — SearchPlan: static arrays for the engine
   frontier   — ring-buffer worker stacks: SoA state + pop/push/compact ops
   extend     — the expansion step behind the StepBackend seam
-               (jnp reference / fused Pallas extend_step kernel)
+               (jnp reference / fused Pallas extend_step kernel /
+               sparse-CSR sorted-intersection walk, auto-selected by
+               target size)
   engine     — while_loop drivers, steal rounds, shard_map glue
   scheduler  — steal-round policy (shared with the GNN batch balancer)
   ref        — sequential + brute-force oracles

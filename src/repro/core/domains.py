@@ -294,6 +294,57 @@ def fixpoint_domains(
         res = nxt
 
 
+def initial_domains_sparse(pattern: Graph, target: Graph, w: int) -> np.ndarray:
+    """:func:`initial_domains` computed from a host :class:`Graph` directly
+    — no :class:`PackedGraph` (hence no ``O(n_t² / 32)`` dense adjacency
+    bitmaps) is ever materialized.  Bit-identical to the packed form for the
+    same target; the entry point for CSR-only plans
+    (`repro.core.plan.build_csr_plan`, DESIGN.md §6.4)."""
+    t_out = target.out_degrees()
+    t_in = target.in_degrees()
+    p_out = pattern.out_degrees()
+    p_in = pattern.in_degrees()
+    bits = np.zeros((pattern.n, w), dtype=np.uint32)
+    for p in range(pattern.n):
+        ok = (
+            (target.labels == pattern.labels[p])
+            & (t_out >= p_out[p])
+            & (t_in >= p_in[p])
+        )
+        idx = np.nonzero(ok)[0]
+        if idx.size:
+            bits[p] = bitmap_from_indices(idx, target.n, w)
+    loops = _self_loops(pattern)
+    if loops:
+        n_elab = target.n_edge_labels
+        loop_mask = target.src == target.dst
+        loop_bits = np.zeros((n_elab, w), dtype=np.uint32)
+        for l in range(n_elab):
+            idx = target.src[loop_mask & (target.edge_labels == l)]
+            if idx.size:
+                loop_bits[l] = bitmap_from_indices(idx, target.n, w)
+        for p, l in loops:
+            if l >= n_elab:
+                bits[p] = 0  # label overflow: no target loop can match
+            else:
+                bits[p] &= loop_bits[l]
+    return bits
+
+
+def compute_domains_sparse(pattern: Graph, target: Graph, w: int) -> DomainResult:
+    """Variant-``ri`` domain pipeline over a host :class:`Graph` (sparse
+    targets): :func:`initial_domains_sparse` plus the same label-overflow /
+    empty-domain unsat rules as :func:`compute_domains`.  AC/FC are dense
+    bitmap sweeps and deliberately out of scope here — CSR-only plans are
+    restricted to ``ri`` (`repro.core.plan.build_csr_plan`)."""
+    bits = initial_domains_sparse(pattern, target, w)
+    if pattern.m and int(pattern.edge_labels.max()) >= target.n_edge_labels:
+        return _unsat(bits)
+    if not np.all(popcount(bits) > 0):
+        return _unsat(bits)
+    return DomainResult(bits, True)
+
+
 def compute_domains(
     pattern: Graph,
     target: PackedGraph,

@@ -41,8 +41,11 @@ from repro.core.plan import SearchPlan
 # Re-exports: the state/plan layers moved out in the §6 split but remain
 # importable from the engine (configs/sge.py, session, tests, dryrun).
 from repro.core.extend import (  # noqa: F401
-    PLAN_LOGICAL, PlanArrays, abstract_plan_arrays, make_plan_arrays,
-    plan_partition_specs,
+    CSR_PLAN_LOGICAL, CsrPlanArrays, PLAN_LOGICAL, PlanArrays,
+    abstract_csr_plan_arrays, abstract_plan_arrays, is_csr_only,
+    make_csr_plan_arrays, make_plan_arrays, plan_arrays_for,
+    plan_partition_specs, plan_partition_specs_for, resolve_step_backend,
+    resolve_step_backend_for_plan,
 )
 from repro.core.frontier import (  # noqa: F401
     STATE_LOGICAL, EngineState, abstract_engine_state, init_state,
@@ -72,11 +75,15 @@ class EngineConfig:
         into a ring buffer (the paper's tools print matches; counting is the
         benchmarked mode).
       step_backend: which ``StepBackend`` expands lanes (DESIGN.md §6.2):
-        ``"jnp"`` (loose-ops reference) or ``"pallas"`` (the fused
-        `repro.kernels.extend_step` kernel — interpret mode off-TPU).
+        ``"jnp"`` (loose-ops reference), ``"pallas"`` (the fused
+        `repro.kernels.extend_step` kernel — interpret mode off-TPU),
+        ``"csr"`` (sparse CSR adjacency walk for huge targets, DESIGN.md
+        §6.4), or ``"auto"`` (``csr`` past ``extend.CSR_AUTO_NT`` target
+        nodes, else ``jnp``).
       use_pallas: with ``step_backend="jnp"``, route only the
         candidate-bitmap AND through `repro.kernels.candidate_mask` (the
-        pre-seam kerneling point; the fused backend subsumes it).
+        pre-seam kerneling point; the fused backend subsumes it); with
+        ``"csr"``, route the CSR walk through `repro.kernels.csr_extend`.
       store_used: keep per-entry used-bitmaps on the stack (True) or
         recompute them from the mapping at expansion time (False; refuted
         as a default by §Perf iteration 7 — see EXPERIMENTS.md §Perf).
@@ -97,10 +104,10 @@ class EngineConfig:
     store_used: bool = True
 
     def __post_init__(self):
-        if self.step_backend not in extend.STEP_BACKENDS:
+        if self.step_backend not in extend.STEP_BACKENDS + ("auto",):
             raise ValueError(
                 f"step_backend={self.step_backend!r}; expected one of "
-                f"{extend.STEP_BACKENDS}"
+                f"{extend.STEP_BACKENDS + ('auto',)}"
             )
 
     def resolved_stack_cap(self, p_pad: int) -> int:
@@ -190,21 +197,42 @@ def _steal_round(cfg: EngineConfig, state: EngineState) -> EngineState:
 # driver
 # ---------------------------------------------------------------------------
 
-def make_expand_fn(cfg: EngineConfig, plan: PlanArrays):
+def make_expand_fn(cfg: EngineConfig, plan: extend.AnyPlanArrays):
     """Build the purely worker-local part of one engine round:
     ``rebalance_interval`` shared expansion steps
     (`repro.core.extend.make_step_fn`), over whatever worker axis the
     caller holds (all ``V`` workers single-device, or the local ``V / D``
-    shard under ``shard_map``)."""
+    shard under ``shard_map``).
+
+    Under the CSR backend (:class:`~repro.core.extend.CsrPlanArrays`) each
+    round ends with a ring compaction (`repro.core.frontier.compact`): the
+    sparse walk's segment gathers want every worker's stack as one
+    contiguous bottom-anchored block — the layout hook ``compact``'s
+    docstring has anticipated since the §6 split.  Compaction only rotates
+    physical slots, so results stay bit-identical (the conformance suite
+    asserts this against the dense backends)."""
     step = extend.make_step_fn(cfg, plan)
+    is_csr = isinstance(plan, extend.CsrPlanArrays)
 
     def expand(state: EngineState) -> EngineState:
-        return lax.fori_loop(0, cfg.rebalance_interval, lambda _, st: step(st), state)
+        state = lax.fori_loop(
+            0, cfg.rebalance_interval, lambda _, st: step(st), state
+        )
+        if is_csr:
+            sd, sm, su, sc, base, size = frontier.compact(
+                state.st_depth, state.st_map, state.st_used, state.st_cand,
+                state.base, state.size,
+            )
+            state = state._replace(
+                st_depth=sd, st_map=sm, st_used=su, st_cand=sc,
+                base=base, size=size,
+            )
+        return state
 
     return expand
 
 
-def make_round_fn(cfg: EngineConfig, plan: PlanArrays):
+def make_round_fn(cfg: EngineConfig, plan: extend.AnyPlanArrays):
     """Build the body of the outer loop: ``rebalance_interval`` expansion
     steps followed by one steal round.  Exposed separately so the dry-run /
     roofline can lower exactly one round (stable cost accounting)."""
@@ -219,7 +247,9 @@ def make_round_fn(cfg: EngineConfig, plan: PlanArrays):
     return body
 
 
-def _engine_loop(cfg: EngineConfig, plan: PlanArrays, state: EngineState) -> EngineState:
+def _engine_loop(
+    cfg: EngineConfig, plan: extend.AnyPlanArrays, state: EngineState
+) -> EngineState:
     max_steps = cfg.max_steps or (1 << 30)
     body = make_round_fn(cfg, plan)
 
@@ -336,7 +366,7 @@ def _steal_round_sharded(cfg: EngineConfig, state: EngineState, axis: str) -> En
 
 
 def _sharded_device_loop(
-    cfg: EngineConfig, axis: str, plan: PlanArrays, state: EngineState
+    cfg: EngineConfig, axis: str, plan: extend.AnyPlanArrays, state: EngineState
 ) -> EngineState:
     """Per-device program run under ``shard_map``: local expansion rounds
     (the same shared step as the single-device path), collective steal
@@ -377,12 +407,17 @@ def _sharded_device_loop(
     return state._replace(overflow=overflow)
 
 
-def make_sharded_engine_fn(cfg: EngineConfig, mesh: Mesh, axis: Optional[str] = None):
-    """Jitted ``(PlanArrays, EngineState) -> EngineState`` with the worker
-    axis sharded over ``axis`` of ``mesh`` via ``shard_map``.
+def make_sharded_engine_fn(
+    cfg: EngineConfig, mesh: Mesh, axis: Optional[str] = None, n_t: int = 0,
+    csr_only: bool = False,
+):
+    """Jitted ``(PlanArrays | CsrPlanArrays, EngineState) -> EngineState``
+    with the worker axis sharded over ``axis`` of ``mesh`` via ``shard_map``.
 
     ``cfg.n_workers`` must be a multiple of the axis size (the session API
-    snaps it up; `repro.core.session.Enumerator`).
+    snaps it up; `repro.core.session.Enumerator`).  ``n_t`` / ``csr_only``
+    feed the ``"auto"`` backend resolution (the plan in-specs pytree must
+    match the array layout `plan_arrays_for` will build).
     """
     axis = axis or mesh_worker_axis(mesh)
     n_dev = int(mesh.shape[axis])
@@ -395,7 +430,7 @@ def make_sharded_engine_fn(cfg: EngineConfig, mesh: Mesh, axis: Optional[str] = 
     fn = shard_map(
         functools.partial(_sharded_device_loop, cfg, axis),
         mesh=mesh,
-        in_specs=(plan_partition_specs(), specs),
+        in_specs=(plan_partition_specs_for(cfg, n_t, csr_only), specs),
         out_specs=specs,
         check_rep=False,
     )
@@ -403,25 +438,29 @@ def make_sharded_engine_fn(cfg: EngineConfig, mesh: Mesh, axis: Optional[str] = 
 
 
 @functools.lru_cache(maxsize=64)
-def _sharded_fn_cached(cfg: EngineConfig, mesh: Mesh, axis: Optional[str]):
+def _sharded_fn_cached(
+    cfg: EngineConfig, mesh: Mesh, axis: Optional[str], n_t: int, csr_only: bool
+):
     # Mesh hashes by device set + axis names, so repeated direct eng.run()
     # calls over a collection reuse one jitted engine per (cfg, mesh) —
     # the module-level analogue of _run_jit; the session layer keeps its
     # own richer cache (shape buckets, counters).
-    return make_sharded_engine_fn(cfg, mesh, axis)
+    return make_sharded_engine_fn(cfg, mesh, axis, n_t=n_t, csr_only=csr_only)
 
 
 def run_sharded(plan: SearchPlan, cfg: EngineConfig, mesh: Mesh) -> EngineResult:
     """Enumerate with worker stacks sharded over ``mesh`` (see :func:`run`)."""
-    fn = _sharded_fn_cached(cfg, mesh, None)
-    arrays = make_plan_arrays(plan)
+    fn = _sharded_fn_cached(cfg, mesh, None, plan.n_t, extend.is_csr_only(plan))
+    arrays = plan_arrays_for(cfg, plan)
     state = init_state(plan, cfg)
     final = jax.block_until_ready(fn(arrays, state))
     return result_from_state(final, cfg)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _run_jit(cfg: EngineConfig, plan: PlanArrays, state: EngineState) -> EngineState:
+def _run_jit(
+    cfg: EngineConfig, plan: extend.AnyPlanArrays, state: EngineState
+) -> EngineState:
     return _engine_loop(cfg, plan, state)
 
 
@@ -431,10 +470,12 @@ def run(plan: SearchPlan, cfg: EngineConfig, mesh: Optional[Mesh] = None) -> Eng
     With ``mesh=None`` (the default) all ``V`` workers run in one device
     program — today's single-device behavior, unchanged.  With a mesh the
     worker axis shards over its ``data`` axis (:func:`run_sharded`).
+    The plan arrays match the resolved step backend (dense bitmaps, or
+    CSR planes for ``step_backend="csr"`` / large-``n_t`` ``"auto"``).
     """
     if mesh is not None:
         return run_sharded(plan, cfg, mesh)
-    arrays = make_plan_arrays(plan)
+    arrays = plan_arrays_for(cfg, plan)
     state = init_state(plan, cfg)
     final = jax.block_until_ready(_run_jit(cfg, arrays, state))
     return result_from_state(final, cfg)

@@ -23,31 +23,65 @@ Backends (selected by ``EngineConfig.step_backend``):
   (scalar-prefetched), the ``dom ∧ ¬used ∧ parents`` AND-tree, per-lane
   lowest-bit extraction and match flagging in **one** kernel invocation
   (DESIGN.md §6.3) — subsuming ``candidate_mask`` on the engine path.
+* ``"csr"`` — :class:`CsrStepBackend`, the sparse layout for targets far
+  beyond paper scale (DESIGN.md §6.4): instead of ANDing dense
+  ``[n_t, w]`` adjacency bitmap rows, it gathers each mapped parent's CSR
+  neighbor segment (:class:`CsrPlanArrays`) and **sorted-intersects** the
+  lists — ``O(parents · deg)`` work against the sparse structure, with the
+  dense ``O(n_planes · n_t · w)`` bitmaps never resident.  With
+  ``cfg.use_pallas`` the walk routes through the
+  `repro.kernels.csr_extend` kernel (scalar-prefetched ``indptr`` row
+  bounds, ``pl.ds`` neighbor loads).
+* ``"auto"`` — not a backend: resolves per plan to ``"csr"`` when
+  ``n_t > CSR_AUTO_NT`` and ``"jnp"`` otherwise
+  (:func:`resolve_step_backend`).
 
-Both backends are bit-identical on every :class:`StepLanes` field the
-engine consumes (property-tested in ``tests/test_extend_step.py``); the
-driver (`repro.core.engine`) never knows which one ran.
+All backends are bit-identical on every :class:`StepLanes` field the
+engine consumes (the conformance matrix in
+``tests/test_backend_conformance.py`` gates this for every current and
+future entry of ``STEP_BACKENDS``); the driver (`repro.core.engine`)
+never knows which one ran.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Protocol, Tuple, TYPE_CHECKING
+from typing import NamedTuple, Protocol, Tuple, TYPE_CHECKING, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec
 
 from repro.core import frontier
 from repro.core.frontier import EngineState
-from repro.core.graph import WORD_BITS
+from repro.core.graph import WORD_BITS, CsrPlanes, csr_planes_from_bitmaps
 from repro.core.plan import SearchPlan
 
 if TYPE_CHECKING:  # engine imports extend; annotations only
     from repro.core.engine import EngineConfig
 
-STEP_BACKENDS = ("jnp", "pallas")
+STEP_BACKENDS = ("jnp", "pallas", "csr")
+
+# "auto" resolution threshold: beyond this many target nodes the dense
+# [n_elab, 2, n_t, w] bitmaps cost O(n_t²/32) words (sge_pdbsv1's 33,067
+# nodes ⇒ ~273 MB) and the sparse layout takes over.
+CSR_AUTO_NT = 32768
+
+# int32 sentinel for padded CSR segment slots: larger than any node id, so
+# sentinel-masked segments stay sorted for the binary-search membership test.
+CSR_SENTINEL = np.int32(2**31 - 1)
+
+
+def resolve_step_backend(cfg: "EngineConfig", n_t: int) -> str:
+    """Resolve ``cfg.step_backend`` for a plan with ``n_t`` target nodes:
+    ``"auto"`` picks ``"csr"`` past :data:`CSR_AUTO_NT` (an explicit backend
+    always wins).  Deterministic per (cfg, n_t), so session compile-cache
+    keys — which carry both — stay unambiguous."""
+    if cfg.step_backend != "auto":
+        return cfg.step_backend
+    return "csr" if n_t > CSR_AUTO_NT else "jnp"
 
 
 class PlanArrays(NamedTuple):
@@ -113,6 +147,181 @@ def plan_partition_specs() -> PlanArrays:
         adj_bits=P(None, None, None, None),
         n_p=P(),
     )
+
+
+# ---------------------------------------------------------------------------
+# CSR plan arrays (the sparse twin of PlanArrays, DESIGN.md §6.4)
+# ---------------------------------------------------------------------------
+
+class CsrPlanArrays(NamedTuple):
+    """Device-resident static plan arrays in CSR adjacency layout.
+
+    The shared fields mirror :class:`PlanArrays`; the dense ``adj_bits``
+    are replaced by flattened per-``(elab, dir)`` CSR planes
+    (`repro.core.graph.CsrPlanes`).  ``seg_iota`` exists to carry the
+    static segment-gather width ``deg_cap`` in its *shape* (plan arrays are
+    traced under jit, so structural constants must be shape-derived);
+    ``indices`` is over-padded by ``deg_cap`` sentinel entries so a
+    ``deg_cap``-wide dynamic slice starting at any real offset never
+    clamps.
+    """
+
+    order_valid: jnp.ndarray  # [p_pad] bool (True for real positions)
+    parent_pos: jnp.ndarray  # [p_pad, mp] int32
+    parent_dir: jnp.ndarray  # [p_pad, mp]
+    parent_elab: jnp.ndarray  # [p_pad, mp]
+    dom_bits: jnp.ndarray  # [p_pad, w] uint32
+    indptr: jnp.ndarray  # [n_planes, n_t + 1] int32, global offsets
+    indices: jnp.ndarray  # [nnz_pad + deg_cap] int32, sentinel-padded tail
+    seg_iota: jnp.ndarray  # [deg_cap] int32 (0..deg_cap-1)
+    n_p: jnp.ndarray  # scalar int32 (actual pattern size)
+
+
+def _pad_deg_cap(deg_cap: int) -> int:
+    """Segment-gather width: max row degree snapped up to a multiple of 8
+    (min 8), so near-identical targets share a compile shape."""
+    return max(8, ((deg_cap + 7) // 8) * 8)
+
+
+def _pad_nnz(nnz: int) -> int:
+    """nnz shape bucket (multiples of 1024) — keeps re-prepared same-target
+    queries on one compiled engine."""
+    return max(1024, ((nnz + 1023) // 1024) * 1024)
+
+
+def make_csr_plan_arrays(plan: SearchPlan) -> CsrPlanArrays:
+    """Build :class:`CsrPlanArrays` from a :class:`SearchPlan`.
+
+    CSR-only plans (``plan.csr`` set by `repro.core.plan.build_csr_plan`)
+    use their planes directly; dense-built plans derive (and cache) the
+    planes from ``adj_bits`` — bit-for-bit the same adjacency relation
+    (`repro.core.graph.csr_planes_from_bitmaps`), which is what lets the
+    conformance suite run every backend on one plan.
+    """
+    cp = plan.csr
+    if cp is None:
+        cp = csr_planes_from_bitmaps(np.asarray(plan.adj_bits))
+        plan.csr = cp  # cache: conversion is O(n_t · w) host work
+    deg_cap = _pad_deg_cap(cp.deg_cap)
+    nnz_pad = _pad_nnz(cp.nnz)
+    indices = np.full(nnz_pad + deg_cap, CSR_SENTINEL, dtype=np.int32)
+    indices[: cp.nnz] = cp.indices
+    return CsrPlanArrays(
+        order_valid=jnp.asarray(plan.order >= 0),
+        parent_pos=jnp.asarray(plan.parent_pos, jnp.int32),
+        parent_dir=jnp.asarray(plan.parent_dir, jnp.int32),
+        parent_elab=jnp.asarray(plan.parent_elab, jnp.int32),
+        dom_bits=jnp.asarray(plan.dom_bits, jnp.uint32),
+        indptr=jnp.asarray(cp.indptr, jnp.int32),
+        indices=jnp.asarray(indices),
+        seg_iota=jnp.arange(deg_cap, dtype=jnp.int32),
+        n_p=jnp.asarray(plan.n_p, jnp.int32),
+    )
+
+
+def abstract_csr_plan_arrays(
+    n_t: int, w: int, p_pad: int, max_parents: int, n_elab: int = 1,
+    nnz: int = 0, deg_cap: int = 8,
+) -> CsrPlanArrays:
+    sds = jax.ShapeDtypeStruct
+    deg_cap = _pad_deg_cap(deg_cap)
+    return CsrPlanArrays(
+        order_valid=sds((p_pad,), jnp.bool_),
+        parent_pos=sds((p_pad, max_parents), jnp.int32),
+        parent_dir=sds((p_pad, max_parents), jnp.int32),
+        parent_elab=sds((p_pad, max_parents), jnp.int32),
+        dom_bits=sds((p_pad, w), jnp.uint32),
+        indptr=sds((n_elab * 2, n_t + 1), jnp.int32),
+        indices=sds((_pad_nnz(nnz) + deg_cap,), jnp.int32),
+        seg_iota=sds((deg_cap,), jnp.int32),
+        n_p=sds((), jnp.int32),
+    )
+
+
+CSR_PLAN_LOGICAL = CsrPlanArrays(
+    order_valid=(None,),
+    parent_pos=(None, None),
+    parent_dir=(None, None),
+    parent_elab=(None, None),
+    dom_bits=(None, "tensor"),
+    indptr=(None, None),
+    indices=(None,),
+    seg_iota=(None,),
+    n_p=(),
+)
+
+
+def csr_plan_partition_specs() -> CsrPlanArrays:
+    """PartitionSpecs for :class:`CsrPlanArrays`: fully replicated, like the
+    dense plan (any worker may map any target node, so every device needs
+    the whole — small — CSR structure)."""
+    P = PartitionSpec
+    return CsrPlanArrays(
+        order_valid=P(None),
+        parent_pos=P(None, None),
+        parent_dir=P(None, None),
+        parent_elab=P(None, None),
+        dom_bits=P(None, None),
+        indptr=P(None, None),
+        indices=P(None),
+        seg_iota=P(None),
+        n_p=P(),
+    )
+
+
+AnyPlanArrays = Union[PlanArrays, CsrPlanArrays]
+
+
+def is_csr_only(plan: SearchPlan) -> bool:
+    """True for plans built by ``build_csr_plan``: the dense adjacency was
+    never materialized, so only the csr layout can run them."""
+    return plan.csr is not None and plan.adj_bits.shape[2] == 0
+
+
+def resolve_step_backend_for_plan(cfg: "EngineConfig", plan: SearchPlan) -> str:
+    """:func:`resolve_step_backend` with the plan in hand: a CSR-only plan
+    has no dense layout to fall back to, so ``"auto"`` always resolves to
+    ``"csr"`` for it — whatever its ``n_t``."""
+    if is_csr_only(plan) and cfg.step_backend == "auto":
+        return "csr"
+    return resolve_step_backend(cfg, plan.n_t)
+
+
+def plan_arrays_for(cfg: "EngineConfig", plan: SearchPlan) -> AnyPlanArrays:
+    """The one plan-array construction point for both drivers and the
+    session: dense :class:`PlanArrays` or sparse :class:`CsrPlanArrays`
+    per the resolved step backend."""
+    if resolve_step_backend_for_plan(cfg, plan) == "csr":
+        return make_csr_plan_arrays(plan)
+    if is_csr_only(plan):
+        raise ValueError(
+            "plan is CSR-only (built by build_csr_plan: dense adj_bits were "
+            "never materialized) — run it with step_backend='csr' or 'auto'"
+        )
+    return make_plan_arrays(plan)
+
+
+def csr_shape_bucket(plan: SearchPlan) -> Tuple[int, int]:
+    """``(deg_cap, nnz)`` padded shape bucket of a plan's CSR arrays — the
+    extra pack-grouping key the session needs under the csr backend: two
+    same-``(n_t, w)`` targets of different density have differently shaped
+    :class:`CsrPlanArrays` and cannot share a vmapped pack lane."""
+    cp = plan.csr
+    if cp is None:
+        cp = csr_planes_from_bitmaps(np.asarray(plan.adj_bits))
+        plan.csr = cp
+    return (_pad_deg_cap(cp.deg_cap), _pad_nnz(cp.nnz))
+
+
+def plan_partition_specs_for(cfg: "EngineConfig", n_t: int, csr_only: bool = False):
+    """Replicated in-specs matching :func:`plan_arrays_for`'s pytree
+    (``csr_only`` mirrors :func:`resolve_step_backend_for_plan`'s rule for
+    plans that have no dense layout)."""
+    if csr_only and cfg.step_backend == "auto":
+        return csr_plan_partition_specs()
+    if resolve_step_backend(cfg, n_t) == "csr":
+        return csr_plan_partition_specs()
+    return plan_partition_specs()
 
 
 # ---------------------------------------------------------------------------
@@ -325,8 +534,112 @@ class PallasStepBackend:
         )
 
 
-def make_step_backend(cfg: "EngineConfig", plan: PlanArrays) -> StepBackend:
-    if cfg.step_backend == "jnp":
+class CsrStepBackend:
+    """The sparse backend (DESIGN.md §6.4): child candidates come from a
+    CSR walk instead of the dense-row AND-tree.
+
+    Per lane, the driver parent's neighbor segment (its ``indptr`` run,
+    gathered ``deg_cap`` wide) proposes candidates; each survives iff its
+    bit is set in ``dom[pos+1] ∧ ¬used'`` and a **binary search finds it in
+    every other mapped parent's sorted segment** — the sorted-intersection
+    of the paper's adjacency lists.  Survivors scatter back into the
+    ``[w]`` candidate bitmap the stack stores, so every downstream
+    structure (and therefore every result bit) is identical to the dense
+    backends.  Parentless positions (disconnected patterns / roots) fall
+    back to the plain ``dom ∧ ¬used`` bitmap.
+
+    With ``cfg.use_pallas`` the whole walk (extraction included) runs as
+    the `repro.kernels.csr_extend` kernel — scalar-prefetched segment
+    bounds, ``pl.ds`` neighbor loads — mirroring how ``use_pallas`` routes
+    the dense jnp backend through ``candidate_mask``.
+    """
+
+    name = "csr"
+
+    def __init__(self, cfg: "EngineConfig", plan: CsrPlanArrays):
+        self.plan = plan
+        self.p_pad, self.w = plan.dom_bits.shape
+        self.n_planes = plan.indptr.shape[0]
+        self.n_t = plan.indptr.shape[1] - 1
+        self.deg_cap = plan.seg_iota.shape[0]
+        self.use_kernel = cfg.use_pallas
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            self._step = functools.partial(kops.csr_extend, deg_cap=self.deg_cap)
+        else:
+            from repro.kernels import ref as kref
+
+            self._step = jax.jit(
+                functools.partial(kref.csr_extend_ref, deg_cap=self.deg_cap)
+            )
+
+    def _segments(self, pos: jnp.ndarray, map2: jnp.ndarray):
+        """Per-lane CSR segment bounds for the child position's parents:
+        ``(start, length)`` int32 ``[B, mp]``, length ``-1`` on unused
+        parent slots."""
+        plan = self.plan
+        safe_pos = jnp.clip(pos, 0, self.p_pad - 1)
+        pp = plan.parent_pos[safe_pos]  # [B, mp]
+        pd = plan.parent_dir[safe_pos]
+        pe = plan.parent_elab[safe_pos]
+        t = jnp.take_along_axis(map2, jnp.maximum(pp, 0), axis=1)
+        t = jnp.clip(jnp.where(pp >= 0, t, 0), 0, self.n_t - 1)
+        plane = jnp.clip(pe * 2 + pd, 0, self.n_planes - 1)
+        start = plan.indptr[plane, t]
+        length = plan.indptr[plane, t + 1] - start
+        return start, jnp.where(pp >= 0, length, -1)
+
+    def expand_lanes(self, depth, map_, used, cand) -> StepLanes:
+        plan = self.plan
+        b = depth.shape[0]
+        # scalar bookkeeping before the walk, as in PallasStepBackend: the
+        # extracted v feeds map2, whose mapped targets select the CSR
+        # segments (a child's parent constraint may reference the
+        # just-extended position).
+        valid_j, v_j, _ = jax.vmap(pop_lowest_bit)(cand)
+        map2 = jnp.where(
+            valid_j[:, None],
+            map_.at[jnp.arange(b), jnp.clip(depth, 0, self.p_pad - 1)].set(v_j),
+            map_,
+        )
+        used2 = jnp.where(
+            valid_j[:, None], used | jax.vmap(bit_row, (0, None))(v_j, self.w), used
+        )
+        child_pos = jnp.clip(depth + 1, 0, self.p_pad - 1)
+        start, length = self._segments(child_pos, map2)
+        cand2, child_cand, meta = self._step(
+            plan.indices, plan.dom_bits, start, length, child_pos,
+            depth, plan.n_p, used, cand,
+        )
+        return StepLanes(
+            valid=meta[:, 0] != 0,
+            v=meta[:, 1],
+            is_match=meta[:, 2] != 0,
+            has_child=meta[:, 3] != 0,
+            cand2=cand2,
+            map2=map2,
+            used2=used2,
+            child_cand=child_cand,
+        )
+
+
+def make_step_backend(cfg: "EngineConfig", plan: AnyPlanArrays) -> StepBackend:
+    """Backend for ``cfg`` over ``plan`` — the array layout must match the
+    resolved backend (``plan_arrays_for`` guarantees it; ``"auto"``
+    resolves by layout here since the abstract path has no ``n_t``)."""
+    if isinstance(plan, CsrPlanArrays):
+        if cfg.step_backend not in ("csr", "auto"):
+            raise ValueError(
+                f"step_backend={cfg.step_backend!r} cannot run CsrPlanArrays"
+            )
+        return CsrStepBackend(cfg, plan)
+    if cfg.step_backend == "csr":
+        raise ValueError(
+            "step_backend='csr' needs CsrPlanArrays "
+            "(build them with make_csr_plan_arrays / plan_arrays_for)"
+        )
+    if cfg.step_backend in ("jnp", "auto"):
         return JnpStepBackend(cfg, plan)
     if cfg.step_backend == "pallas":
         return PallasStepBackend(cfg, plan)

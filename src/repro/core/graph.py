@@ -127,12 +127,50 @@ class Graph:
 
     # ---- adjacency structures -------------------------------------------
     def csr(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Out-adjacency CSR: (indptr [n+1], indices [m], edge_labels [m])."""
-        order = np.argsort(self.src, kind="stable")
+        """Out-adjacency CSR: (indptr [n+1], indices [m], edge_labels [m]).
+
+        Canonical form: ``indices`` are **sorted within each row** (by
+        destination, then edge label for parallel edges), so segment
+        consumers can binary-search / sorted-intersect them directly.
+        Duplicate edges are kept — this is an edge-list CSR; the per-plane
+        form the CSR step backend consumes (:func:`csr_planes`) dedupes.
+        Degenerate rows (isolated vertices) are zero-length ``indptr`` runs.
+        """
+        order = np.lexsort((self.edge_labels, self.dst, self.src))
         indptr = np.zeros(self.n + 1, dtype=np.int64)
-        np.add.at(indptr, self.src + 1, 1)
+        if self.m:
+            np.add.at(indptr, self.src.astype(np.int64) + 1, 1)
         indptr = np.cumsum(indptr)
         return indptr, self.dst[order], self.edge_labels[order]
+
+    def csr_planes(self, n_elab: Optional[int] = None) -> "CsrPlanes":
+        """Per-``(edge_label, direction)`` canonical CSR adjacency planes —
+        the sparse twin of :meth:`adjacency_bitmaps` (see :class:`CsrPlanes`).
+
+        Plane ``l*2 + 0`` row ``u`` lists ``v`` with ``(u, v) ∈ E`` label
+        ``l``; plane ``l*2 + 1`` row ``u`` lists ``v`` with ``(v, u) ∈ E``.
+        Rows are sorted ascending and **deduplicated** (duplicate arcs set
+        the same adjacency bit once), making each plane bit-for-bit the
+        dense bitmap's support.
+        """
+        nl = n_elab if n_elab is not None else self.n_edge_labels
+        if self.m and int(self.edge_labels.max()) >= nl:
+            raise ValueError(
+                f"edge label {int(self.edge_labels.max())} >= n_elab={nl}"
+            )
+        n = self.n
+        # flat row keys: (elab * 2 + dir) * n + row_node
+        out_key = (self.edge_labels.astype(np.int64) * 2 + 0) * n + self.src
+        in_key = (self.edge_labels.astype(np.int64) * 2 + 1) * n + self.dst
+        keys = np.concatenate([out_key, in_key])
+        cols = np.concatenate([self.dst, self.src]).astype(np.int64)
+        order = np.lexsort((cols, keys))
+        keys, cols = keys[order], cols[order]
+        if keys.size:
+            keep = np.ones(keys.size, dtype=bool)
+            keep[1:] = (keys[1:] != keys[:-1]) | (cols[1:] != cols[:-1])
+            keys, cols = keys[keep], cols[keep]
+        return _assemble_csr_planes(keys, cols, 2 * nl, n)
 
     def adjacency_bitmaps(self, w: Optional[int] = None) -> np.ndarray:
         """Packed adjacency bitmaps ``[n_edge_labels, 2, n, w]`` uint32.
@@ -188,6 +226,84 @@ class PackedGraph:
     @property
     def n_edge_labels(self) -> int:
         return int(self.adj_bits.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class CsrPlanes:
+    """Canonical per-``(edge_label, direction)`` CSR adjacency (host numpy)
+    — the sparse layout behind the engine's ``step_backend="csr"``.
+
+    One flat ``indices`` array holds every plane's rows back to back;
+    ``indptr[p, t]`` / ``indptr[p, t + 1]`` bound row ``t`` of plane
+    ``p = elab * 2 + dir`` as **global** offsets into ``indices`` (so
+    ``indptr[p, n_t] == indptr[p + 1, 0]``).  Rows are sorted ascending and
+    deduplicated; an isolated vertex is a zero-length run.  Footprint is
+    ``O(nnz + n_planes · n_t)`` words versus the dense bitmaps'
+    ``O(n_planes · n_t · w)`` — the reason this layout exists
+    (DESIGN.md §6.4).
+    """
+
+    n_t: int
+    indptr: np.ndarray  # [n_planes, n_t + 1] int32, global offsets
+    indices: np.ndarray  # [nnz] int32, sorted + deduped per row
+    deg_cap: int  # max row length over all planes
+
+    @property
+    def n_planes(self) -> int:
+        return int(self.indptr.shape[0])
+
+    @property
+    def n_edge_labels(self) -> int:
+        return self.n_planes // 2
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.indptr.nbytes + self.indices.nbytes)
+
+
+def _assemble_csr_planes(
+    row_keys: np.ndarray, cols: np.ndarray, n_planes: int, n_t: int
+) -> CsrPlanes:
+    """Shared :class:`CsrPlanes` assembly from (sorted, deduped) flat row
+    keys ``plane * n_t + row`` and their column entries — both builders
+    (:meth:`Graph.csr_planes`, :func:`csr_planes_from_bitmaps`) must stay
+    bit-identical, so the bincount → cumsum → overlapping-``indptr`` logic
+    lives once."""
+    counts = np.bincount(row_keys, minlength=n_planes * n_t).astype(np.int64)
+    flat_ptr = np.zeros(n_planes * n_t + 1, dtype=np.int64)
+    np.cumsum(counts, out=flat_ptr[1:])
+    if n_t:
+        # overlapping [n_planes, n_t + 1] view: row p = flat_ptr[p*n : p*n+n+1]
+        indptr = np.stack(
+            [flat_ptr[p * n_t : p * n_t + n_t + 1] for p in range(n_planes)]
+        ).astype(np.int32)
+        deg_cap = int(counts.max()) if counts.size else 0
+    else:
+        indptr = np.zeros((n_planes, 1), dtype=np.int32)
+        deg_cap = 0
+    return CsrPlanes(
+        n_t=n_t, indptr=indptr, indices=cols.astype(np.int32), deg_cap=deg_cap
+    )
+
+
+def csr_planes_from_bitmaps(adj_bits: np.ndarray) -> CsrPlanes:
+    """Convert dense ``[n_elab, 2, n_t, w]`` adjacency bitmaps to
+    :class:`CsrPlanes` (bit-for-bit the same adjacency relation) — the
+    conformance bridge that lets the CSR step backend run any dense-built
+    :class:`~repro.core.plan.SearchPlan`."""
+    ne, two, n_t, w = adj_bits.shape
+    flat = np.ascontiguousarray(adj_bits.reshape(ne * two * n_t, w))
+    # uint32 LSB-first bit unpacking: little-endian byte view + little bitorder
+    expanded = np.unpackbits(
+        flat.astype("<u4").view(np.uint8).reshape(flat.shape[0], w * 4),
+        axis=1, bitorder="little",
+    )
+    rows, cols = np.nonzero(expanded[:, : max(n_t, 1)])
+    return _assemble_csr_planes(rows, cols, ne * two, n_t)
 
 
 # ---------------------------------------------------------------------------

@@ -39,8 +39,8 @@ class QueryResult:
     steps: int
 
 
-def _stack_plans(plans: Sequence[SearchPlan]) -> eng.PlanArrays:
-    arrays = [eng.make_plan_arrays(p) for p in plans]
+def _stack_plans(plans: Sequence[SearchPlan], cfg: EngineConfig):
+    arrays = [eng.plan_arrays_for(cfg, p) for p in plans]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *arrays)
 
 
@@ -49,7 +49,7 @@ def run_batch(plans: Sequence[SearchPlan], cfg: EngineConfig):
 
     Deprecated: prefer :meth:`Enumerator.run_batch`, which adds LPT
     balancing, bucket grouping and compile caching."""
-    stacked = _stack_plans(plans)
+    stacked = _stack_plans(plans, cfg)
     states = jax.tree.map(
         lambda *xs: jnp.stack(xs), *[eng.init_state(p, cfg) for p in plans]
     )

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import domains as dom_mod
 from repro.core import ordering as ord_mod
-from repro.core.graph import Graph, PackedGraph, popcount
+from repro.core.graph import CsrPlanes, Graph, PackedGraph, n_words, popcount
 
 VARIANTS = ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc", "ri-ds-si-acfc")
 
@@ -71,8 +71,14 @@ class SearchPlan:
     parent_elab: np.ndarray  # [p_pad, max_parents] int32
     n_parents: np.ndarray  # [p_pad] int32
     dom_bits: np.ndarray  # [p_pad, w] uint32 — domain of order[i], position space
-    adj_bits: np.ndarray  # [n_elab, 2, n_t, w] uint32
+    adj_bits: np.ndarray  # [n_elab, 2, n_t, w] uint32 ([n_elab, 2, 0, w] when
+    # the plan is CSR-only — see ``csr`` and :func:`build_csr_plan`)
     satisfiable: bool
+    # Sparse adjacency twin (DESIGN.md §6.4): set by build_csr_plan (then
+    # adj_bits is an empty placeholder and only step_backend="csr" can run
+    # the plan) or lazily derived from adj_bits by the csr plan-array
+    # builder (`repro.core.extend.make_csr_plan_arrays`).
+    csr: Optional[CsrPlanes] = None
 
     @property
     def max_parents(self) -> int:
@@ -118,6 +124,63 @@ def build_plan(
             pattern, target, use_ac=use_ds, use_fc=flags["use_fc"],
             ac_iters=ac_iters, interleave=flags["interleave"],
         )
+    return _assemble_plan(
+        pattern, dres, variant, use_ds, use_si, p_pad, max_parents,
+        n_t=target.n, w=target.w, adj_bits=target.adj_bits, csr=None,
+    )
+
+
+def build_csr_plan(
+    pattern: Graph,
+    target: Graph,
+    variant: str = "ri",
+    p_pad: Optional[int] = None,
+    max_parents: Optional[int] = None,
+    w: Optional[int] = None,
+) -> SearchPlan:
+    """Build a **CSR-only** :class:`SearchPlan` straight from a host
+    :class:`Graph` — the dense ``[n_elab, 2, n_t, w]`` adjacency bitmaps are
+    never materialized (DESIGN.md §6.4), so targets far beyond the paper's
+    33k nodes fit in memory.  ``plan.adj_bits`` is an empty placeholder and
+    ``plan.csr`` holds the canonical adjacency planes; only
+    ``step_backend="csr"`` (or ``"auto"``) can execute the result.
+
+    Restricted to variant ``ri``: AC / FC preprocessing are dense bitmap
+    sweeps over the adjacency planes the sparse path exists to avoid.
+    """
+    flags = variant_flags(variant)
+    if flags["use_ac"] or flags["use_fc"]:
+        raise ValueError(
+            f"build_csr_plan supports variant 'ri' only (got {variant!r}): "
+            "AC/FC preprocessing sweeps dense adjacency bitmaps"
+        )
+    w = w or n_words(target.n)
+    dres = dom_mod.compute_domains_sparse(pattern, target, w)
+    n_elab = target.n_edge_labels
+    return _assemble_plan(
+        pattern, dres, variant, use_ds=False, use_si=False,
+        p_pad=p_pad, max_parents=max_parents,
+        n_t=target.n, w=w,
+        adj_bits=np.zeros((n_elab, 2, 0, w), dtype=np.uint32),
+        csr=target.csr_planes(n_elab),
+    )
+
+
+def _assemble_plan(
+    pattern: Graph,
+    dres: dom_mod.DomainResult,
+    variant: str,
+    use_ds: bool,
+    use_si: bool,
+    p_pad: Optional[int],
+    max_parents: Optional[int],
+    n_t: int,
+    w: int,
+    adj_bits: np.ndarray,
+    csr: Optional[CsrPlanes],
+) -> SearchPlan:
+    """Ordering + padded-array assembly shared by :func:`build_plan` and
+    :func:`build_csr_plan`."""
     dom_sizes = popcount(dres.bits)
 
     # --- ordering ----------------------------------------------------------
@@ -153,21 +216,22 @@ def build_plan(
     n_parents = np.zeros(p_pad, dtype=np.int32)
     n_parents[:n_p] = pcnt
 
-    dom_pos = np.zeros((p_pad, target.w), dtype=np.uint32)
+    dom_pos = np.zeros((p_pad, w), dtype=np.uint32)
     dom_pos[:n_p] = dres.bits[ordering.order]
 
     return SearchPlan(
         variant=variant,
         n_p=n_p,
         p_pad=p_pad,
-        n_t=target.n,
-        w=target.w,
+        n_t=n_t,
+        w=w,
         order=order,
         parent_pos=parent_pos,
         parent_dir=parent_dir,
         parent_elab=parent_elab,
         n_parents=n_parents,
         dom_bits=dom_pos,
-        adj_bits=target.adj_bits,
+        adj_bits=adj_bits,
         satisfiable=dres.satisfiable,
+        csr=csr,
     )

@@ -76,8 +76,10 @@ def ref_enumerate(
     candidate accepted increments ``states``; full-depth candidates are
     matches.
     """
-    packed = packed or PackedGraph.from_graph(target)
-    plan = plan or build_plan(pattern, packed, variant=variant)
+    if plan is None:  # a given plan already carries everything (and a
+        # CSR-only plan exists precisely to avoid this dense packing)
+        packed = packed or PackedGraph.from_graph(target)
+        plan = build_plan(pattern, packed, variant=variant)
     if not plan.satisfiable or pattern.n == 0:
         return RefResult(matches=0, states=0, mappings=[] if record_mappings else None)
 
@@ -88,7 +90,15 @@ def ref_enumerate(
     def adj(lab: int, d: int, t: int) -> set:
         key = (lab, d, t)
         if key not in adj_sets:
-            adj_sets[key] = set(bitmap_to_indices(plan.adj_bits[lab, d, t]).tolist())
+            if plan.csr is not None and plan.adj_bits.shape[2] == 0:
+                # CSR-only plan (build_csr_plan): read the adjacency plane's
+                # sorted segment instead of the never-materialized bitmaps
+                ptr = plan.csr.indptr[lab * 2 + d]
+                adj_sets[key] = set(plan.csr.indices[ptr[t]:ptr[t + 1]].tolist())
+            else:
+                adj_sets[key] = set(
+                    bitmap_to_indices(plan.adj_bits[lab, d, t]).tolist()
+                )
         return adj_sets[key]
 
     mapping = [-1] * n_p

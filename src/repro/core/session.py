@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.core import domains as dom_mod
 from repro.core import engine as eng
+from repro.core import extend
 from repro.core.engine import EngineConfig, EngineResult
 from repro.core.graph import Graph, PackedGraph, popcount
 from repro.core.plan import SearchPlan, build_plan, variant_flags
@@ -309,6 +310,14 @@ class Enumerator:
     same-bucket queries costs at most one compilation per (kind, pack
     width).  ``compiles`` and ``cache_hits`` counters let benchmarks prove
     recompilation is gone.
+
+    ``Enumerator(..., step_backend="auto")`` defers the expansion-backend
+    choice to the target size: queries against targets beyond
+    ``extend.CSR_AUTO_NT`` (32,768) nodes run the sparse CSR backend
+    (DESIGN.md §6.4), smaller ones the dense ``jnp`` step.  An explicit
+    ``step_backend=`` always wins.  The cache key carries the cfg *and*
+    the bucket's ``n_t``, so one session can mix resolutions without
+    collisions.
     """
 
     def __init__(
@@ -358,6 +367,11 @@ class Enumerator:
 
     def _engine_fn(self, cfg: EngineConfig, kind: str, pack: int, query: Query) -> Callable:
         key = (cfg, kind, pack, eng.mesh_signature(self.mesh)) + query.bucket
+        if eng.resolve_step_backend_for_plan(cfg, query.plan) == "csr":
+            # csr plan arrays carry density-dependent shapes (deg_cap, nnz);
+            # without them in the key, a same-bucket different-density query
+            # would count as a cache hit while jit silently retraces
+            key = key + extend.csr_shape_bucket(query.plan)
         fn = self._engines.get(key)
         if fn is not None:
             self.cache_hits += 1
@@ -365,7 +379,10 @@ class Enumerator:
         self.compiles += 1
         if kind == "single":
             if self.mesh is not None:
-                fn = eng.make_sharded_engine_fn(cfg, self.mesh)
+                fn = eng.make_sharded_engine_fn(
+                    cfg, self.mesh, n_t=query.plan.n_t,
+                    csr_only=eng.is_csr_only(query.plan),
+                )
             else:
                 fn = jax.jit(functools.partial(eng._engine_loop, cfg))
         else:
@@ -565,9 +582,16 @@ class Enumerator:
         return self._matchset(query, -1, res, match_s, retries=retries)
 
     def _run_single(self, cfg: EngineConfig, query: Query) -> EngineResult:
-        """One engine invocation through the compile cache (no retry)."""
+        """One engine invocation through the compile cache (no retry).
+
+        Plan arrays follow the resolved step backend: dense
+        :class:`~repro.core.extend.PlanArrays`, or
+        :class:`~repro.core.extend.CsrPlanArrays` for ``step_backend="csr"``
+        — including ``"auto"``, which flips to the sparse layout past
+        ``extend.CSR_AUTO_NT`` target nodes (the cache key carries both the
+        cfg and ``n_t``, so the resolution is stable per entry)."""
         fn = self._engine_fn(cfg, "single", 1, query)
-        arrays = eng.make_plan_arrays(query.plan)
+        arrays = eng.plan_arrays_for(cfg, query.plan)
         state = eng.init_state(query.plan, cfg)
         final = jax.block_until_ready(fn(arrays, state))
         return eng.result_from_state(final, cfg)
@@ -631,7 +655,13 @@ class Enumerator:
             if not q.plan.satisfiable:
                 yield self._matchset(q, i, _empty_engine_result(), 0.0)
             else:
-                groups.setdefault(q.bucket, []).append(i)
+                key = q.bucket
+                if eng.resolve_step_backend(cfg, q.plan.n_t) == "csr":
+                    # csr plan arrays carry target-density-dependent shapes
+                    # (deg_cap, nnz); only same-shape plans can stack into
+                    # one vmapped pack
+                    key = key + extend.csr_shape_bucket(q.plan)
+                groups.setdefault(key, []).append(i)
 
         for idxs in groups.values():
             weights = [_predict_work(qs[i].plan) for i in idxs]
@@ -665,7 +695,7 @@ class Enumerator:
         t0 = time.perf_counter()
         plans = [qs[i].plan for i in members]
         fn = self._engine_fn(cfg, "batch", pack_size, qs[members[0]])
-        arrays = [eng.make_plan_arrays(p) for p in plans]
+        arrays = [eng.plan_arrays_for(cfg, p) for p in plans]
         states = [eng.init_state(p, cfg) for p in plans]
         # pad inert lanes so every pack of this bucket shares one compilation
         # (size==0 lanes freeze immediately under the vmapped while_loop)

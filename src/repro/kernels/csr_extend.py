@@ -1,0 +1,215 @@
+"""Pallas TPU kernel for the sparse CSR expansion step (DESIGN.md §6.4).
+
+The dense fused step (`repro.kernels.extend_step`) ANDs whole ``[w]``-word
+adjacency bitmap rows — ``O(n_planes · n_t · w)`` resident words, which
+stops scaling past the paper's 33k-node targets.  This kernel walks the
+**CSR adjacency planes** instead: for each popped lane it
+
+1. extracts the lowest untried candidate bit ``v`` in-register (the same
+   ``cand2`` / fused ``¬(used ∨ bit(v))`` child init as the dense kernel);
+2. loads the **driver** parent's neighbor segment with a ``pl.ds`` dynamic
+   slice of the flat ``indices`` array — the segment bounds arrive through
+   **scalar prefetch** (the backend gathers ``indptr[plane, t]`` /
+   ``indptr[plane, t + 1]`` per lane before launch, the same
+   row-bounds-ahead-of-data pattern the dense kernel uses for row ids);
+3. sorted-intersects: each proposed neighbor survives iff its bit is set in
+   ``dom ∧ ¬used'`` and a vectorized binary search finds it in every other
+   mapped parent's (sorted, sentinel-padded) segment;
+4. scatters the survivors into the child candidate bitmap and emits the
+   ``(valid, v, is_match, has_child)`` meta row.
+
+TPU mapping
+-----------
+* Grid ``(b,)`` — one step per lane; all ``deg_cap``-wide vector work for a
+  lane happens in one step, so segments never round-trip through HBM.
+* ``indices`` is presented as a single ``[1, N]`` VMEM-resident block
+  (sparse targets keep ``N·4`` bytes in the low MBs — pdbsv1-scale graphs
+  are ~100 words of indices per *thousand* dense bitmap words); the
+  per-parent ``pl.ds`` loads slice it at the prefetched offsets.
+* The membership search and the survivor scatter are expressed as jnp ops
+  on values inside the kernel (gather / searchsorted / scatter-add over
+  ``deg_cap``-length int vectors).  Off-TPU the kernel runs in interpret
+  mode — the validation mode for this container; semantics are gated by
+  ``csr_extend_ref`` and the cross-backend conformance suite
+  (``tests/test_backend_conformance.py``).
+
+Oracle: `repro.kernels.ref.csr_extend_ref` (bit-exact — it is also the
+``CsrStepBackend``'s jnp compute path, so kernel-vs-oracle equality is
+exactly kernel-vs-engine equality).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.candidate_mask import pad_words
+from repro.kernels.extend_step import META_WIDTH, _lowest_bit
+
+# python int (not a jnp scalar: pallas kernels must not capture traced
+# constants); fits int32 and exceeds every node id, so sentinel-masked
+# segments stay sorted.
+SENTINEL = 2**31 - 1
+
+
+def _kernel(
+    cpos_ref, sst_ref, sln_ref, depth_ref, np_ref,  # scalar prefetch
+    cand_ref, used_ref, dom_ref, ind_ref,  # operands
+    cand2_ref, child_ref, meta_ref,  # outputs
+    *, mp: int, deg_cap: int,
+):
+    l = pl.program_id(0)
+    wp = cand_ref.shape[1]
+
+    c = cand_ref[...]
+    valid, v, vmask = _lowest_bit(c)
+    cand2_ref[...] = c ^ vmask
+    base = dom_ref[...] & ~used_ref[...] & ~vmask  # [1, wp]
+
+    # --- driver segment: first real parent slot ---------------------------
+    lens = sln_ref[l, :]  # [mp] from SMEM
+    real = lens >= 0
+    has_parent = jnp.any(real)
+    d = jnp.argmax(real)
+    d_start = sst_ref[l, d]
+    d_len = jnp.where(has_parent, lens[d], 0)
+    offs = lax.iota(jnp.int32, deg_cap)
+    u = ind_ref[0, pl.ds(d_start, deg_cap)]  # [deg_cap]
+    k_on = offs < d_len
+    dup = jnp.concatenate([jnp.zeros((1,), bool), u[1:] == u[:-1]])
+    ok = k_on & ~dup
+
+    # --- membership in dom ∧ ¬used' ---------------------------------------
+    u_c = jnp.clip(u, 0, wp * 32 - 1)
+    word = u_c // 32
+    bit = (u_c % 32).astype(jnp.uint32)
+    in_base = (jnp.take(base[0], word) >> bit) & jnp.uint32(1)
+    ok = ok & (in_base != 0)
+
+    # --- sorted-intersection against the other parents' segments ----------
+    def member(j, ok):
+        seg = ind_ref[0, pl.ds(sst_ref[l, j], deg_cap)]
+        seg = jnp.where(offs < sln_ref[l, j], seg, jnp.int32(SENTINEL))
+        p = jnp.searchsorted(seg, u)
+        hit = jnp.take(seg, jnp.clip(p, 0, deg_cap - 1)) == u
+        skip = jnp.logical_not(real[j]) | (j == d)
+        return ok & (skip | hit)
+
+    ok = lax.fori_loop(0, mp, member, ok)
+
+    # --- scatter survivors; parentless lanes keep the plain base ----------
+    bits = jnp.where(ok, jnp.uint32(1) << bit, jnp.uint32(0))
+    w_scatter = jnp.where(ok, word, wp)  # out-of-range ⇒ dropped
+    walked = jnp.zeros((wp,), jnp.uint32).at[w_scatter].add(bits, mode="drop")
+    child = jnp.where(has_parent, walked[None, :], base)
+
+    depth = depth_ref[l]
+    n_p = np_ref[0]
+    is_match = valid & (depth + 1 >= n_p)
+    want_child = valid & jnp.logical_not(is_match)
+    child = jnp.where(want_child, child, jnp.uint32(0))
+    child_ref[...] = child
+    has_child = want_child & jnp.any(child != jnp.uint32(0))
+    meta_ref[...] = jnp.stack(
+        [
+            valid.astype(jnp.int32),
+            jnp.where(valid, v, -1),
+            is_match.astype(jnp.int32),
+            has_child.astype(jnp.int32),
+        ]
+    ).reshape(1, META_WIDTH)
+
+
+@functools.partial(jax.jit, static_argnames=("deg_cap", "interpret"))
+def csr_extend(
+    indices: jnp.ndarray,  # [nnz_pad + deg_cap] int32 flat CSR columns
+    dom_bits: jnp.ndarray,  # [p_pad, w] uint32
+    seg_start: jnp.ndarray,  # [b, mp] int32 global segment offsets
+    seg_len: jnp.ndarray,  # [b, mp] int32 (-1 on unused parent slots)
+    child_pos: jnp.ndarray,  # [b] int32 order position of the child
+    depth: jnp.ndarray,  # [b] int32 depth of the popped entry
+    n_p: jnp.ndarray,  # scalar int32 actual pattern size
+    used: jnp.ndarray,  # [b, w] uint32
+    cand: jnp.ndarray,  # [b, w] uint32
+    deg_cap: int = 8,
+    interpret: bool = True,
+):
+    """One sparse fused expansion over ``b`` lanes.
+
+    Same contract as `repro.kernels.extend_step.extend_step` with the
+    scalar-prefetched row-id table replaced by per-parent CSR segment
+    bounds: returns ``(cand2 [b, w], child_cand [b, w], meta [b, 4])``,
+    ``meta`` columns ``(valid, v, is_match, has_child)``.  ``indices`` must
+    be over-padded by ``deg_cap`` (`repro.core.extend.make_csr_plan_arrays`
+    guarantees it) so segment slices never clamp.  ``interpret=True``
+    executes the kernel body in Python on CPU (the validation mode for
+    this container).
+    """
+    b, w = cand.shape
+    mp = seg_len.shape[1]
+    if mp == 0:  # degenerate plans: keep one neutral (unused) parent slot
+        seg_start = jnp.zeros((b, 1), jnp.int32)
+        seg_len = jnp.full((b, 1), -1, jnp.int32)
+        mp = 1
+    wp = pad_words(w)
+    if wp != w:
+        padw = ((0, 0), (0, wp - w))
+        dom_bits = jnp.pad(dom_bits, padw)
+        used = jnp.pad(used, padw)
+        cand = jnp.pad(cand, padw)
+    n_ind = indices.shape[0]
+    n_pad = pad_words(n_ind)
+    if n_pad != n_ind:
+        indices = jnp.pad(indices, (0, n_pad - n_ind), constant_values=SENTINEL)
+
+    grid = (b,)
+
+    def lane_map(l, cpos_s, sst_s, sln_s, depth_s, np_s):
+        return (l, 0)
+
+    def dom_map(l, cpos_s, sst_s, sln_s, depth_s, np_s):
+        return (cpos_s[l], 0)
+
+    def ind_map(l, cpos_s, sst_s, sln_s, depth_s, np_s):
+        return (0, 0)
+
+    cand2, child, meta = pl.pallas_call(
+        functools.partial(_kernel, mp=mp, deg_cap=deg_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, wp), lane_map),  # cand
+                pl.BlockSpec((1, wp), lane_map),  # used
+                pl.BlockSpec((1, wp), dom_map),  # dom_bits
+                pl.BlockSpec((1, n_pad), ind_map),  # flat CSR indices
+            ],
+            out_specs=[
+                pl.BlockSpec((1, wp), lane_map),  # cand2
+                pl.BlockSpec((1, wp), lane_map),  # child_cand
+                pl.BlockSpec((1, META_WIDTH), lane_map),  # meta
+            ],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((b, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((b, META_WIDTH), jnp.int32),
+        ),
+        interpret=interpret,
+    )(
+        child_pos.astype(jnp.int32),
+        seg_start.astype(jnp.int32),
+        seg_len.astype(jnp.int32),
+        depth.astype(jnp.int32),
+        jnp.asarray(n_p, jnp.int32).reshape((1,)),
+        cand,
+        used,
+        dom_bits,
+        indices.reshape(1, n_pad),
+    )
+    return cand2[:, :w], child[:, :w], meta

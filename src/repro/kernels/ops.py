@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import candidate_mask as _cm
+from repro.kernels import csr_extend as _ce
 from repro.kernels import domain_ac as _ac
 from repro.kernels import extend_step as _es
 from repro.kernels import popcount_reduce as _pc
@@ -55,6 +56,15 @@ def extend_step(rows, dom_bits, child_pos, row_idx, depth, n_p, used, cand,
     return _es.extend_step(
         rows, dom_bits, child_pos, row_idx, depth, n_p, used, cand,
         interpret=resolve_interpret(interpret),
+    )
+
+
+def csr_extend(indices, dom_bits, seg_start, seg_len, child_pos, depth, n_p,
+               used, cand, deg_cap=8, interpret=None):
+    """See `repro.kernels.csr_extend.csr_extend` (the sparse engine step)."""
+    return _ce.csr_extend(
+        indices, dom_bits, seg_start, seg_len, child_pos, depth, n_p,
+        used, cand, deg_cap=deg_cap, interpret=resolve_interpret(interpret),
     )
 
 

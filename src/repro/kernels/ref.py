@@ -85,6 +85,107 @@ def extend_step_ref(
     return cand2, child, meta
 
 
+def csr_extend_ref(
+    indices: jnp.ndarray,  # [nnz_pad + deg_cap] int32 flat CSR columns
+    dom_bits: jnp.ndarray,  # [p_pad, w] uint32
+    seg_start: jnp.ndarray,  # [b, mp] int32 segment offsets into ``indices``
+    seg_len: jnp.ndarray,  # [b, mp] int32 (-1 on unused parent slots)
+    child_pos: jnp.ndarray,  # [b] int32 order position of the child
+    depth: jnp.ndarray,  # [b] int32 depth of the popped entry
+    n_p: jnp.ndarray,  # scalar int32 actual pattern size
+    used: jnp.ndarray,  # [b, w] uint32
+    cand: jnp.ndarray,  # [b, w] uint32
+    *,
+    deg_cap: int,
+):
+    """Oracle for the sparse expansion step `repro.kernels.csr_extend` —
+    and the jnp compute path of `repro.core.extend.CsrStepBackend`
+    (DESIGN.md §6.4).
+
+    Per lane: extract the lowest set candidate bit ``v`` (``cand2`` is the
+    residual) and form ``base = dom[child_pos] ∧ ¬used ∧ ¬bit(v)``; then,
+    instead of ANDing dense adjacency rows, gather the **first** real
+    parent's CSR neighbor segment (``deg_cap``-wide, sorted + deduped) and
+    keep each proposed node iff its bit is set in ``base`` and a binary
+    search finds it in every other real parent's segment (sorted
+    intersection).  Survivors scatter into the child bitmap; parentless
+    lanes (all ``seg_len < 0``) fall back to ``base``.  Returns
+    ``(cand2, child_cand, meta)`` with ``meta`` columns
+    ``(valid, v, is_match, has_child)`` exactly as `extend_step_ref`.
+    """
+    b, w = cand.shape
+    mp = seg_len.shape[1]
+    sentinel = jnp.int32(2**31 - 1)
+
+    # --- lowest-bit extraction (identical to extend_step_ref) -------------
+    nz = cand != 0
+    valid = jnp.any(nz, axis=-1)
+    widx = jnp.argmax(nz, axis=-1)
+    word0 = jnp.take_along_axis(cand, widx[:, None], axis=-1)[:, 0]
+    tz = lax.population_count(~word0 & (word0 - jnp.uint32(1)))
+    v = widx.astype(jnp.int32) * 32 + tz.astype(jnp.int32)
+    lowbit = word0 & (~word0 + jnp.uint32(1))
+    sel = (jnp.arange(w)[None, :] == widx[:, None]) & valid[:, None]
+    vmask = jnp.where(sel, lowbit[:, None], jnp.uint32(0))
+    cand2 = cand ^ vmask
+
+    base = dom_bits[child_pos] & ~used & ~vmask  # [b, w]
+
+    # --- the CSR walk ------------------------------------------------------
+    real = seg_len >= 0
+    has_parent = jnp.any(real, axis=1)
+    d = jnp.argmax(real, axis=1)  # driver = first real parent
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    d_start = seg_start[bidx, d]
+    d_len = jnp.where(has_parent, seg_len[bidx, d], 0)
+    offs = jnp.arange(deg_cap, dtype=jnp.int32)[None, :]  # [1, K]
+    u = indices[d_start[:, None] + offs]  # [b, K]
+    k_on = offs < d_len[:, None]
+    dup = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), u[:, 1:] == u[:, :-1]], axis=1
+    )
+    ok = k_on & ~dup
+    u_c = jnp.clip(u, 0, w * 32 - 1)
+    word = u_c // 32
+    bit = (u_c % 32).astype(jnp.uint32)
+    in_base = (jnp.take_along_axis(base, word, axis=1) >> bit) & jnp.uint32(1)
+    ok = ok & (in_base != 0)
+
+    def member(j, ok):
+        seg = indices[seg_start[:, j][:, None] + offs]
+        seg = jnp.where(offs < seg_len[:, j][:, None], seg, sentinel)
+        p = jax.vmap(jnp.searchsorted)(seg, u)
+        hit = jnp.take_along_axis(seg, jnp.clip(p, 0, deg_cap - 1), axis=1) == u
+        skip = (~real[:, j]) | (j == d)
+        return ok & (skip[:, None] | hit)
+
+    ok = lax.fori_loop(0, mp, member, ok)
+    bits = jnp.where(ok, jnp.uint32(1) << bit, jnp.uint32(0))
+    w_scatter = jnp.where(ok, word, w)  # out-of-range ⇒ dropped
+    walked = (
+        jnp.zeros((b, w), jnp.uint32)
+        .at[bidx[:, None], w_scatter]
+        .add(bits, mode="drop")
+    )
+    child = jnp.where(has_parent[:, None], walked, base)
+
+    # --- match / child flagging (identical to extend_step_ref) ------------
+    is_match = valid & (depth + 1 >= n_p)
+    want_child = valid & ~is_match
+    child = jnp.where(want_child[:, None], child, jnp.uint32(0))
+    has_child = want_child & jnp.any(child != 0, axis=-1)
+    meta = jnp.stack(
+        [
+            valid.astype(jnp.int32),
+            jnp.where(valid, v, -1),
+            is_match.astype(jnp.int32),
+            has_child.astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    return cand2, child, meta
+
+
 def adjacency_any_ref(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Per-row "does ``rows[t] ∧ mask`` have any set bit" — the inner test of
     RI-DS arc consistency.  Returns ``[n_t]`` int32 in {0, 1}."""

@@ -18,7 +18,9 @@ Three execution modes map to the session's three methods:
 ``--step-backend pallas`` swaps the engine's expansion step for the fused
 Pallas ``extend_step`` kernel (DESIGN.md §6.2) — results are bit-identical
 to the default ``jnp`` backend; off-TPU the kernel runs in interpret mode
-(validation, not speed — see API.md).
+(validation, not speed — see API.md).  ``--step-backend csr`` runs the
+sparse CSR walk (DESIGN.md §6.4; also bit-identical), ``auto`` picks csr
+past 32,768 target nodes.
 
 ``--devices N`` runs the paper's worker sweep multi-device: the session's
 worker stacks shard over a 1-D ``data`` mesh of ``N`` devices
@@ -88,10 +90,13 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=0,
                     help="shard worker stacks over N devices (0 = no mesh; "
                     "on CPU forces N virtual XLA devices)")
-    ap.add_argument("--step-backend", choices=("jnp", "pallas"), default="jnp",
+    ap.add_argument("--step-backend",
+                    choices=("jnp", "pallas", "csr", "auto"), default="jnp",
                     help="expansion-step backend (DESIGN.md §6.2): 'jnp' "
                     "loose ops, 'pallas' the fused extend_step kernel "
-                    "(interpret mode off-TPU — validation, not speed)")
+                    "(interpret mode off-TPU — validation, not speed), "
+                    "'csr' the sparse adjacency walk for huge targets "
+                    "(§6.4), 'auto' = csr past 32,768 target nodes")
     args = ap.parse_args()
     mode = "packed" if args.packed else args.mode
 

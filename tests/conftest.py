@@ -72,6 +72,30 @@ def extract_connected_pattern(rng, g: Graph, n_nodes: int) -> Graph:
     )
 
 
+def power_law_target(rng, n, avg_deg=4.0, alpha=2.0, n_labels=8,
+                     n_edge_labels=1, selfloops=0) -> Graph:
+    """Large-sparse random target (power-law degrees, ``n_t ≫`` engine
+    lanes) — the regime the CSR step backend exists for.  Hub rows are long,
+    tail nodes near-isolated (many degenerate zero-length ``indptr`` runs),
+    so CSR paths are exercised at realistic sparsity rather than on dense
+    toy graphs.  ``selfloops`` appends loop edges on distinct nodes, as in
+    :func:`random_graph`."""
+    from repro.data.graphgen import power_law_graph
+
+    g = power_law_graph(
+        n, avg_deg=avg_deg, alpha=alpha, n_labels=n_labels,
+        n_edge_labels=n_edge_labels, seed=int(rng.integers(2**31)),
+    )
+    if not selfloops:
+        return g
+    edges = list(zip(g.src.tolist(), g.dst.tolist()))
+    elabs = g.edge_labels.tolist()
+    for u in rng.choice(n, size=min(selfloops, n), replace=False):
+        edges.append((int(u), int(u)))
+        elabs.append(int(rng.integers(0, n_edge_labels)))
+    return Graph.from_edges(n, edges, labels=g.labels, edge_labels=elabs)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,349 @@
+"""Cross-backend conformance suite — the single gate every entry of
+``STEP_BACKENDS`` must pass (DESIGN.md §6.2/§6.4).
+
+Supersedes the pairwise jnp ≡ pallas checks (``tests/test_extend_step.py``
+keeps the kernel-vs-oracle sweeps): everything here parametrizes over
+**all** step backends, so a future backend is conformance-tested the
+moment it is appended to ``repro.core.extend.STEP_BACKENDS``.
+
+Layers of evidence, strongest first:
+
+* **state-level**: after any number of shared expansion steps, every
+  backend's :class:`EngineState` pytree — stacks, ring bookkeeping,
+  counters, match buffers — is bit-identical to the ``jnp`` reference
+  (fixed-seed matrix always; a hypothesis property test when available);
+* **end-to-end**: whole engine runs agree counter-for-counter and
+  mapping-for-mapping across a case matrix that includes self-loops,
+  multiple edge labels, ``store_used=False``, kernel routing
+  (``use_pallas``), and a power-law large-sparse target;
+* **mesh**: sharding over ≥ 2 devices changes nothing for any backend
+  (runs in CI's 4-virtual-device job);
+* **session**: ``Enumerator(step_backend=...)`` threads every backend
+  through the compile cache, and ``"auto"`` resolves by target size with
+  explicit override.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Enumerator, SubgraphIndex
+from repro.core import engine as eng
+from repro.core import extend
+from repro.core.graph import PackedGraph
+from repro.core.plan import build_csr_plan, build_plan
+from tests.conftest import (
+    extract_connected_pattern,
+    power_law_target,
+    random_graph,
+)
+
+BACKENDS = extend.STEP_BACKENDS
+ALT_BACKENDS = tuple(b for b in BACKENDS if b != "jnp")
+
+
+# ---------------------------------------------------------------------------
+# case matrix: (target, pattern) generators exercising distinct plan shapes
+# ---------------------------------------------------------------------------
+
+def _dense(rng):
+    tgt = random_graph(rng, 40, 120, n_labels=3)
+    return tgt, extract_connected_pattern(rng, tgt, 5)
+
+
+def _selfloops(rng):
+    tgt = random_graph(rng, 36, 100, n_labels=2, selfloops=4)
+    return tgt, extract_connected_pattern(rng, tgt, 5)
+
+
+def _edge_labels(rng):
+    tgt = random_graph(rng, 32, 90, n_labels=2, n_elabs=3)
+    return tgt, extract_connected_pattern(rng, tgt, 4)
+
+
+def _sparse_power_law(rng):
+    # n_t >> lanes with hub rows and many degenerate (isolated) indptr runs
+    tgt = power_law_target(rng, 400, avg_deg=3.0, n_labels=6, selfloops=2)
+    return tgt, extract_connected_pattern(rng, tgt, 4)
+
+
+CASES = {
+    "dense": _dense,
+    "selfloops": _selfloops,
+    "edge_labels": _edge_labels,
+    "sparse_power_law": _sparse_power_law,
+}
+
+
+def _plan(rng, case, variant="ri-ds-si-fc"):
+    tgt, pat = CASES[case](rng)
+    return build_plan(pat, PackedGraph.from_graph(tgt)), tgt, pat
+
+
+def _cfg(backend, **kw):
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("expand_width", 2)
+    return EngineConfig(step_backend=backend, **kw)
+
+
+def _assert_results_identical(a, b):
+    assert (a.matches, a.states, a.steps, a.steals, a.steal_rounds) == (
+        b.matches, b.states, b.steps, b.steals, b.steal_rounds,
+    )
+    np.testing.assert_array_equal(a.per_worker_states, b.per_worker_states)
+    np.testing.assert_array_equal(a.per_worker_matches, b.per_worker_matches)
+    np.testing.assert_array_equal(a.per_worker_steals, b.per_worker_steals)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end conformance over the full case matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("backend", ALT_BACKENDS)
+def test_end_to_end_conformance(rng, backend, case):
+    """Whole runs agree with the jnp reference counter-for-counter,
+    mappings included, on every plan-shape case."""
+    plan, _, _ = _plan(rng, case)
+    ref = eng.run(plan, _cfg("jnp", collect_matches=64))
+    got = eng.run(plan, _cfg(backend, collect_matches=64))
+    _assert_results_identical(ref, got)
+    np.testing.assert_array_equal(ref.match_buf, got.match_buf)
+
+
+@pytest.mark.parametrize("backend", [b for b in BACKENDS if b != "pallas"])
+def test_kernel_routing_conformance(rng, backend):
+    """use_pallas routes part of each backend's step through a kernel
+    (candidate_mask under jnp, csr_extend under csr) — still identical."""
+    plan, _, _ = _plan(rng, "selfloops")
+    ref = eng.run(plan, _cfg("jnp"))
+    got = eng.run(plan, _cfg(backend, use_pallas=True))
+    _assert_results_identical(ref, got)
+
+
+@pytest.mark.parametrize("backend", ALT_BACKENDS)
+def test_store_used_false_conformance(rng, backend):
+    plan, _, _ = _plan(rng, "dense")
+    _assert_results_identical(
+        eng.run(plan, _cfg("jnp", store_used=False)),
+        eng.run(plan, _cfg(backend, store_used=False)),
+    )
+
+
+@pytest.mark.parametrize("variant", ("ri", "ri-ds-si-fc", "ri-ds-si-acfc"))
+def test_variant_conformance_csr(rng, variant):
+    """Preprocessing variants change the plan, never the backend contract."""
+    tgt, pat = _dense(rng)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt), variant=variant)
+    _assert_results_identical(
+        eng.run(plan, _cfg("jnp")), eng.run(plan, _cfg("csr"))
+    )
+
+
+def test_csr_only_plan_all_sparse_paths(rng):
+    """A CSR-only plan (build_csr_plan: dense bitmaps never materialized)
+    matches the dense-built ri plan through the csr backend, and refuses
+    dense backends with a clear error."""
+    tgt, pat = _sparse_power_law(rng)
+    dense_plan = build_plan(pat, PackedGraph.from_graph(tgt), variant="ri")
+    sparse_plan = build_csr_plan(pat, tgt, variant="ri")
+    assert sparse_plan.adj_bits.shape[2] == 0  # nothing dense was built
+    ref = eng.run(dense_plan, _cfg("jnp"))
+    got = eng.run(sparse_plan, _cfg("csr"))
+    _assert_results_identical(ref, got)
+    # "auto" must run a CSR-only plan whatever its n_t (here << CSR_AUTO_NT):
+    # there is no dense layout to fall back to
+    got_auto = eng.run(sparse_plan, _cfg("auto"))
+    _assert_results_identical(ref, got_auto)
+    with pytest.raises(ValueError, match="CSR-only"):
+        eng.run(sparse_plan, _cfg("jnp"))
+
+
+# ---------------------------------------------------------------------------
+# state-level conformance: bit-identical EngineState after shared steps
+# ---------------------------------------------------------------------------
+
+def _run_steps(cfg, plan, arrays, n_steps):
+    step = jax.jit(extend.make_step_fn(cfg, arrays))
+    state = eng.init_state(plan, cfg)
+    for _ in range(n_steps):
+        state = step(state)
+    return state
+
+
+@pytest.mark.parametrize("store_used,collect", [(True, 8), (False, 0)])
+@pytest.mark.parametrize("backend", ALT_BACKENDS)
+def test_state_level_conformance(rng, backend, store_used, collect):
+    """Every backend's EngineState pytree equals the jnp reference after
+    each of several shared expansion steps — the strongest single check
+    (stacks, ring bookkeeping, counters, match buffers)."""
+    plan, _, _ = _plan(rng, "selfloops")
+    kw = dict(n_workers=3, expand_width=2, store_used=store_used,
+              collect_matches=collect)
+    cfg_ref, cfg_alt = _cfg("jnp", **kw), _cfg(backend, **kw)
+    sj = _run_steps(cfg_ref, plan, eng.plan_arrays_for(cfg_ref, plan), 5)
+    sb = _run_steps(cfg_alt, plan, eng.plan_arrays_for(cfg_alt, plan), 5)
+    for name, a, b in zip(eng.EngineState._fields, sj, sb):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"EngineState field {name} diverged for {backend}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# auto resolution + session threading
+# ---------------------------------------------------------------------------
+
+def test_auto_resolution_rule():
+    cfg = EngineConfig(step_backend="auto")
+    assert extend.resolve_step_backend(cfg, extend.CSR_AUTO_NT) == "jnp"
+    assert extend.resolve_step_backend(cfg, extend.CSR_AUTO_NT + 1) == "csr"
+    # explicit backend always wins
+    for b in BACKENDS:
+        assert extend.resolve_step_backend(
+            EngineConfig(step_backend=b), extend.CSR_AUTO_NT + 1
+        ) == b
+
+
+def test_auto_selects_csr_arrays_past_threshold(rng, monkeypatch):
+    """With the threshold lowered under the test target's size, "auto"
+    builds CsrPlanArrays and still reproduces the dense jnp result."""
+    plan, _, _ = _plan(rng, "dense")
+    monkeypatch.setattr(extend, "CSR_AUTO_NT", plan.n_t - 1)
+    cfg = _cfg("auto")
+    assert isinstance(eng.plan_arrays_for(cfg, plan), extend.CsrPlanArrays)
+    _assert_results_identical(eng.run(plan, _cfg("jnp")), eng.run(plan, cfg))
+    # explicit override ignores the threshold
+    cfg_j = _cfg("jnp")
+    assert isinstance(eng.plan_arrays_for(cfg_j, plan), extend.PlanArrays)
+
+
+@pytest.mark.parametrize("backend", BACKENDS + ("auto",))
+def test_session_threads_every_backend(rng, backend):
+    """step_backend= flows through Enumerator for every backend; each cfg
+    gets its own compile-cache entries and identical results."""
+    tgt, pat = _dense(rng)
+    idx = SubgraphIndex.build(tgt)
+    ref = Enumerator(idx, n_workers=2, expand_width=2)
+    alt = Enumerator(idx, n_workers=2, expand_width=2, step_backend=backend)
+    ra = ref.run(ref.prepare(pat))
+    rb = alt.run(alt.prepare(pat))
+    assert (ra.matches, ra.states, ra.steps) == (rb.matches, rb.states, rb.steps)
+
+
+def test_session_batch_stream_conformance(rng):
+    """run_batch / stream (the vmapped pack path) agree across backends."""
+    tgt, _ = _dense(rng)
+    idx = SubgraphIndex.build(tgt)
+    pats = [extract_connected_pattern(rng, tgt, k) for k in (3, 4, 5, 4)]
+    want = None
+    for backend in BACKENDS:
+        s = Enumerator(idx, n_workers=2, expand_width=2, step_backend=backend)
+        got = [(ms.matches, ms.states, ms.steps)
+               for ms in s.run_batch([s.prepare(p) for p in pats])]
+        if want is None:
+            want = got
+        else:
+            assert got == want, f"pack path diverged for {backend}"
+
+
+def test_pack_path_mixed_density_targets(rng):
+    """Same-bucket queries against different-density targets have
+    differently shaped CsrPlanArrays (deg_cap, nnz) — the pack grouper
+    must split them instead of stacking mismatched shapes."""
+    t1 = random_graph(rng, 40, 120, n_labels=3)
+    t2 = random_graph(rng, 40, 60, n_labels=3)
+    want = None
+    for backend in ("jnp", "csr"):
+        s = Enumerator(config=_cfg(backend, n_workers=2))
+        qs = [s.prepare(extract_connected_pattern(np.random.default_rng(5), t, 4),
+                        index=SubgraphIndex.build(t))
+              for t in (t1, t2)]
+        got = [ms.matches for ms in s.run_batch(qs, pack_size=4)]
+        if want is None:
+            want = got
+        else:
+            assert got == want
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        EngineConfig(step_backend="bogus")
+    with pytest.raises(ValueError, match="CsrPlanArrays"):
+        plan_arrays = extend.abstract_plan_arrays(8, 1, 4, 2)
+        extend.make_step_backend(EngineConfig(step_backend="csr"), plan_arrays)
+
+
+# ---------------------------------------------------------------------------
+# property test: any backend ≡ jnp over random plans/configs (hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment without hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        backend=st.sampled_from(ALT_BACKENDS),
+        expand_width=st.integers(1, 4),
+        n_workers=st.integers(1, 4),
+        store_used=st.booleans(),
+        collect=st.booleans(),
+        n_steps=st.integers(1, 6),
+    )
+    def test_property_backends_bit_identical_states(
+        seed, backend, expand_width, n_workers, store_used, collect, n_steps
+    ):
+        """Any STEP_BACKENDS entry must produce bit-identical EngineState
+        pytrees to jnp after any number of shared expansion steps, over
+        random graphs (self-loops included), patterns, and configs."""
+        rng = np.random.default_rng(seed)
+        tgt = random_graph(rng, 16, 40, n_labels=2,
+                           selfloops=int(rng.integers(0, 3)))
+        pat = extract_connected_pattern(rng, tgt, int(rng.integers(3, 6)))
+        if pat.m == 0:
+            return
+        plan = build_plan(pat, PackedGraph.from_graph(tgt))
+        kw = dict(
+            n_workers=n_workers,
+            expand_width=expand_width,
+            store_used=store_used,
+            collect_matches=8 if collect else 0,
+        )
+        cfg_ref, cfg_alt = _cfg("jnp", **kw), _cfg(backend, **kw)
+        sj = _run_steps(cfg_ref, plan, eng.plan_arrays_for(cfg_ref, plan), n_steps)
+        sb = _run_steps(cfg_alt, plan, eng.plan_arrays_for(cfg_alt, plan), n_steps)
+        for name, a, b in zip(eng.EngineState._fields, sj, sb):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"EngineState field {name} diverged for {backend}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# mesh path (runs in CI's 4-virtual-device job)
+# ---------------------------------------------------------------------------
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+)
+
+
+@multi_device
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mesh_path_conformance(rng, backend):
+    """Sharding the worker axis over 2 devices changes nothing for any
+    backend: the mesh driver calls the same shared step (and, for csr,
+    the same per-round compaction)."""
+    tgt, pat = _dense(rng)
+    plan = build_plan(pat, PackedGraph.from_graph(tgt))
+    mesh = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+    cfg = _cfg(backend)
+    _assert_results_identical(eng.run(plan, cfg), eng.run(plan, cfg, mesh=mesh))

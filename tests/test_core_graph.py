@@ -8,6 +8,7 @@ from repro.core.graph import (
     PackedGraph,
     bitmap_from_indices,
     bitmap_to_indices,
+    csr_planes_from_bitmaps,
     n_words,
     popcount,
 )
@@ -66,3 +67,95 @@ def test_n_words():
     assert n_words(1) == 1
     assert n_words(32) == 1
     assert n_words(33) == 2
+
+
+# ---------------------------------------------------------------------------
+# CSR canonical form (consumed directly by the csr step backend, so these
+# arrays must be canonical: sorted indices per row, degenerate runs exact)
+# ---------------------------------------------------------------------------
+
+def _assert_rows_sorted(indptr, indices):
+    for u in range(len(indptr) - 1):
+        seg = indices[indptr[u]:indptr[u + 1]]
+        assert np.all(np.diff(seg) >= 0), (u, seg)
+
+
+def test_csr_rows_sorted_and_complete(rng):
+    """csr() indices are sorted within every row regardless of edge
+    insertion order, and each row is exactly the out-neighborhood."""
+    n = 12
+    edges = [(int(u), int(v)) for u, v in rng.integers(0, n, (40, 2)) if u != v]
+    g = Graph.from_edges(n, edges)
+    indptr, indices, elabs = g.csr()
+    assert indptr[0] == 0 and indptr[-1] == g.m
+    _assert_rows_sorted(indptr, indices)
+    for u in range(n):
+        seg = indices[indptr[u]:indptr[u + 1]]
+        np.testing.assert_array_equal(np.sort(seg), np.sort(g.out_neighbors(u)))
+
+
+def test_csr_empty_graph():
+    g = Graph.from_edges(0, [])
+    indptr, indices, elabs = g.csr()
+    assert indptr.tolist() == [0] and indices.size == 0 and elabs.size == 0
+    cp = g.csr_planes(n_elab=1)
+    assert cp.indptr.shape == (2, 1) and cp.nnz == 0 and cp.deg_cap == 0
+
+
+def test_csr_isolated_vertices():
+    """Isolated vertices are zero-length indptr runs — before and after
+    populated rows."""
+    g = Graph.from_edges(5, [(1, 3), (3, 1)])
+    indptr, indices, _ = g.csr()
+    assert indptr.tolist() == [0, 0, 1, 1, 2, 2]
+    cp = g.csr_planes()
+    for p in range(cp.n_planes):
+        row_lens = np.diff(cp.indptr[p])
+        assert row_lens[0] == 0 and row_lens[2] == 0 and row_lens[4] == 0
+
+
+def test_csr_self_loops_kept():
+    """Self-loops appear in their own row (and on the plane diagonals),
+    sorted in place among the other neighbors."""
+    g = Graph.from_edges(4, [(2, 2), (2, 0), (2, 3)])
+    indptr, indices, _ = g.csr()
+    np.testing.assert_array_equal(indices[indptr[2]:indptr[3]], [0, 2, 3])
+    cp = g.csr_planes()
+    out_row2 = cp.indices[cp.indptr[0, 2]:cp.indptr[0, 3]]
+    np.testing.assert_array_equal(out_row2, [0, 2, 3])
+    in_row2 = cp.indices[cp.indptr[1, 2]:cp.indptr[1, 3]]
+    np.testing.assert_array_equal(in_row2, [2])
+
+
+def test_csr_duplicate_edges():
+    """csr() keeps duplicates (edge-list CSR, sorted so they're adjacent);
+    csr_planes() dedupes them — its rows are bitmap supports."""
+    g = Graph.from_edges(3, [(0, 1), (0, 2), (0, 1), (0, 1)])
+    indptr, indices, _ = g.csr()
+    np.testing.assert_array_equal(indices[indptr[0]:indptr[1]], [1, 1, 1, 2])
+    cp = g.csr_planes()
+    np.testing.assert_array_equal(cp.indices[cp.indptr[0, 0]:cp.indptr[0, 1]],
+                                  [1, 2])
+    assert cp.deg_cap == 2
+
+
+def test_csr_planes_match_bitmaps(rng):
+    """csr_planes() is bit-for-bit the support of adjacency_bitmaps() —
+    the contract the conformance suite's bit-identity rests on — including
+    with multiple edge labels, duplicates, and self-loops."""
+    n = 14
+    edges = [(int(u), int(v)) for u, v in rng.integers(0, n, (50, 2))]
+    edges += edges[:5]  # duplicates (some may be self-loops already)
+    elabs = rng.integers(0, 3, len(edges))
+    g = Graph.from_edges(n, edges, edge_labels=elabs)
+    cp = g.csr_planes()
+    cb = csr_planes_from_bitmaps(PackedGraph.from_graph(g).adj_bits)
+    np.testing.assert_array_equal(cp.indptr, cb.indptr)
+    np.testing.assert_array_equal(cp.indices, cb.indices)
+    assert cp.deg_cap == cb.deg_cap and cp.n_t == cb.n_t
+
+
+def test_csr_planes_label_overflow_rejected():
+    g = Graph.from_edges(2, [(0, 1)], edge_labels=[3])
+    with pytest.raises(ValueError, match="edge label"):
+        g.csr_planes(n_elab=2)

@@ -148,3 +148,83 @@ def test_store_used_false_reconstructs_used(rng):
                              expand_width=2, store_used=False)
     got = np.asarray(pop.used)[0, 0]
     np.testing.assert_array_equal(got, np.array([1 << 3, 1 << 1], np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# compact's contiguous-segment guarantee (the property the csr step backend
+# relies on: engine.make_expand_fn compacts every round under CsrPlanArrays)
+# ---------------------------------------------------------------------------
+
+def test_compact_contiguous_segment_guarantee(rng):
+    """After compact every worker's live entries occupy physical slots
+    [0, size) — logical position j IS slot j, with no wraparound — and a
+    pop from the compacted state selects exactly the same entries."""
+    v, s_cap = 3, 7
+    base = np.array([6, 3, 0])  # worker 0 and 1 wrap, worker 2 doesn't
+    size = np.array([5, 6, 4])
+    arrs = _ring(rng, v=v, s_cap=s_cap, base=base, size=size)
+    pop_before = frontier.pop_top_k(*arrs, expand_width=3)
+    nd, nm, nu, nc, nb, ns = frontier.compact(*arrs)
+    np.testing.assert_array_equal(np.asarray(nb), 0)
+    for wk in range(v):
+        for j in range(size[wk]):
+            old = (base[wk] + j) % s_cap
+            # slot j holds logical entry j: the contiguity invariant
+            np.testing.assert_array_equal(np.asarray(nd)[wk, j],
+                                          np.asarray(arrs[0])[wk, old])
+            np.testing.assert_array_equal(np.asarray(nc)[wk, j],
+                                          np.asarray(arrs[3])[wk, old])
+    pop_after = frontier.pop_top_k(nd, nm, nu, nc, nb, ns, expand_width=3)
+    np.testing.assert_array_equal(np.asarray(pop_before.k), np.asarray(pop_after.k))
+    np.testing.assert_array_equal(np.asarray(pop_before.lane_on),
+                                  np.asarray(pop_after.lane_on))
+    np.testing.assert_array_equal(np.asarray(pop_before.depth),
+                                  np.asarray(pop_after.depth))
+    np.testing.assert_array_equal(np.asarray(pop_before.cand),
+                                  np.asarray(pop_after.cand))
+    on = np.asarray(pop_before.lane_on)
+    # map/used payloads are only defined on lit lanes (off lanes read slot 0)
+    np.testing.assert_array_equal(np.asarray(pop_before.map)[on],
+                                  np.asarray(pop_after.map)[on])
+    np.testing.assert_array_equal(np.asarray(pop_before.used)[on],
+                                  np.asarray(pop_after.used)[on])
+
+
+def test_compact_idempotent_and_full_ring(rng):
+    """Compacting twice equals compacting once, including for completely
+    full rings (size == s_cap, every slot live)."""
+    v, s_cap = 2, 5
+    arrs = _ring(rng, v=v, s_cap=s_cap, base=np.array([4, 2]),
+                 size=np.array([s_cap, s_cap]))
+    once = frontier.compact(*arrs)
+    twice = frontier.compact(*once)
+    for a, b in zip(once, twice):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compact_after_wraparound_push(rng):
+    """Post-wraparound compaction: drive a ring across the physical
+    boundary with a real pop/push cycle (children + surviving parents),
+    then compact and check the contiguity invariant survives."""
+    v, s_cap, e = 1, 6, 2
+    base = np.array([4])  # 3 live entries at slots 4, 5, 0 — wrapped
+    size = np.array([3])
+    arrs = _ring(rng, v=v, s_cap=s_cap, base=base, size=size)
+    pop = frontier.pop_top_k(*arrs, expand_width=e)
+    assert int(pop.k[0]) == 2
+    out = frontier.push_entries(
+        *arrs[:6], pop.k, pop.lane_on, pop.lane_on,
+        pop.depth, pop.map, pop.used, pop.cand,
+        pop.depth + 1, pop.map, pop.used, pop.cand,
+    )
+    nd, nm, nu, nc, new_size = out
+    assert int(new_size[0]) == 5  # 1 untouched + 2 parents + 2 children
+    cd, cm, cu, cc, cb, cs = frontier.compact(nd, nm, nu, nc, arrs[4], new_size)
+    np.testing.assert_array_equal(np.asarray(cb), 0)
+    np.testing.assert_array_equal(np.asarray(cs), np.asarray(new_size))
+    for j in range(int(new_size[0])):
+        old = (base[0] + j) % s_cap
+        np.testing.assert_array_equal(np.asarray(cd)[0, j], np.asarray(nd)[0, old])
+        np.testing.assert_array_equal(np.asarray(cc)[0, j], np.asarray(nc)[0, old])
+        np.testing.assert_array_equal(np.asarray(cm)[0, j], np.asarray(nm)[0, old])
+        np.testing.assert_array_equal(np.asarray(cu)[0, j], np.asarray(nu)[0, old])
