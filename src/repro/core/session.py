@@ -52,6 +52,7 @@ Typical use::
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -327,6 +328,7 @@ class Enumerator:
         variant: str = "ri-ds-si-fc",
         mesh: Union["jax.sharding.Mesh", int, None] = None,
         domain_backend: str = "device",
+        max_cache_entries: int = 0,
         **config_kwargs,
     ):
         cfg = config or EngineConfig(**config_kwargs)
@@ -348,22 +350,53 @@ class Enumerator:
         self.config = cfg
         self.variant = variant
         self.domain_backend = domain_backend
+        if max_cache_entries < 0:
+            raise ValueError(f"max_cache_entries must be >= 0, got {max_cache_entries}")
+        self.max_cache_entries = max_cache_entries
         self.index = SubgraphIndex.build(index) if index is not None else None
-        self._engines: Dict[tuple, Callable] = {}
+        # LRU-ordered compile cache: hits move entries to the back, inserts
+        # evict from the front once max_cache_entries is exceeded (0 = no
+        # bound — batch scripts; servers set a bound, DESIGN.md §7).
+        self._engines: "collections.OrderedDict[tuple, Callable]" = collections.OrderedDict()
         # target-side device arrays for batched domain preprocessing, keyed
         # by the packed target's identity (pinned so ids can't be recycled)
         self._dom_targets: Dict[int, Tuple[PackedGraph, dom_mod.TargetDomainArrays]] = {}
         self.compiles = 0
         self.cache_hits = 0
+        self.evictions = 0
 
     # -- cache -------------------------------------------------------------
 
-    def cache_info(self) -> Dict[str, int]:
+    def cache_stats(self) -> Dict[str, int]:
+        """Compile-cache counters: ``compiles`` / ``cache_hits`` /
+        ``evictions`` plus current ``entries`` and the configured
+        ``max_entries`` bound (0 = unbounded).  The serving metrics layer
+        snapshots this to report cache hit rate."""
         return {
             "compiles": self.compiles,
             "cache_hits": self.cache_hits,
+            "evictions": self.evictions,
             "entries": len(self._engines),
+            "max_entries": self.max_cache_entries,
         }
+
+    # kept name from PR 1; same counters, cache_stats() is the full view
+    cache_info = cache_stats
+
+    def _cache_put(self, key: tuple, fn: Callable) -> None:
+        """Insert a jitted engine, LRU-evicting past ``max_cache_entries``."""
+        self._engines[key] = fn
+        if self.max_cache_entries:
+            while len(self._engines) > self.max_cache_entries:
+                self._engines.popitem(last=False)
+                self.evictions += 1
+
+    def _cache_get(self, key: tuple) -> Optional[Callable]:
+        fn = self._engines.get(key)
+        if fn is not None:
+            self._engines.move_to_end(key)
+            self.cache_hits += 1
+        return fn
 
     def _engine_fn(self, cfg: EngineConfig, kind: str, pack: int, query: Query) -> Callable:
         key = (cfg, kind, pack, eng.mesh_signature(self.mesh)) + query.bucket
@@ -372,9 +405,8 @@ class Enumerator:
             # without them in the key, a same-bucket different-density query
             # would count as a cache hit while jit silently retraces
             key = key + extend.csr_shape_bucket(query.plan)
-        fn = self._engines.get(key)
+        fn = self._cache_get(key)
         if fn is not None:
-            self.cache_hits += 1
             return fn
         self.compiles += 1
         if kind == "single":
@@ -387,7 +419,7 @@ class Enumerator:
                 fn = jax.jit(functools.partial(eng._engine_loop, cfg))
         else:
             fn = jax.jit(jax.vmap(functools.partial(eng._engine_loop, cfg)))
-        self._engines[key] = fn
+        self._cache_put(key, fn)
         return fn
 
     # -- preparation -------------------------------------------------------
@@ -527,9 +559,8 @@ class Enumerator:
             pallas_mode, b_pad, p_pad, a_pad, l_pad,
             index.n, index.w, index.n_edge_labels,
         )
-        fn = self._engines.get(key)
+        fn = self._cache_get(key)
         if fn is not None:
-            self.cache_hits += 1
             return fn
         self.compiles += 1
         fn = dom_mod.device_fixpoint(
@@ -537,7 +568,7 @@ class Enumerator:
             interleave=flags["interleave"], pallas_mode=pallas_mode,
             batched=True,
         )
-        self._engines[key] = fn
+        self._cache_put(key, fn)
         return fn
 
     def _coerce(self, q: Union[Query, Graph]) -> Query:
@@ -621,6 +652,76 @@ class Enumerator:
 
     # -- execution: batch / stream ----------------------------------------
 
+    def coalesce_key(self, query: Query, cfg: Optional[EngineConfig] = None) -> tuple:
+        """The pack-compatibility key of a query: queries with equal keys
+        can stack lane-for-lane into one vmapped pack (same jitted engine,
+        same array shapes).  ``stream``/``run_batch`` group by it, and the
+        serving layer's continuous coalescer (`repro.serve`) buckets
+        pending queries by exactly this key, so concurrent heterogeneous
+        load rides the compile cache at one compilation per key.
+
+        The key is the shape bucket ``(p_pad, max_parents, n_t, w,
+        n_elab)``; under the csr backend it also carries the plan's padded
+        ``(deg_cap, nnz)`` — two same-bucket targets of different density
+        have differently shaped :class:`~repro.core.extend.CsrPlanArrays`
+        and cannot share a pack lane.
+        """
+        cfg = cfg or self.config
+        key = query.bucket
+        if eng.resolve_step_backend_for_plan(cfg, query.plan) == "csr":
+            key = key + extend.csr_shape_bucket(query.plan)
+        return key
+
+    def run_pack(
+        self,
+        queries: Sequence[Union[Query, Graph]],
+        pack_size: Optional[int] = None,
+        cfg: Optional[EngineConfig] = None,
+    ) -> List[MatchSet]:
+        """Batch-submission hook for the serving layer: execute queries
+        that share one :meth:`coalesce_key` as padded vmapped packs of
+        ``pack_size`` lanes, returning one :class:`MatchSet` per query in
+        input order (``query_index`` is the input position).
+
+        Unlike :meth:`run_batch` this does **no** grouping or LPT
+        balancing — the caller (the `repro.serve` coalescer) has already
+        decided the pack; mixed keys raise.  Unsatisfiable queries get
+        empty results without touching the engine.  ``cfg`` overrides the
+        session config (the service uses it to thread per-request
+        ``collect_matches`` budgets); overflowed lanes go through the
+        usual doubled-``stack_cap`` single retry.  Under a mesh, queries
+        route singly through the sharded engine (pack-vmap over
+        ``shard_map`` is an open ROADMAP item).
+        """
+        cfg = cfg or self.config
+        qs = self._coerce_all(queries)
+        pack_size = pack_size or max(len(qs), 1)
+        out: List[Optional[MatchSet]] = [None] * len(qs)
+        live: List[int] = []
+        for i, q in enumerate(qs):
+            if q.plan.satisfiable:
+                live.append(i)
+            else:
+                out[i] = self._matchset(q, i, _empty_engine_result(), 0.0)
+        if live:
+            keys = {self.coalesce_key(qs[i], cfg) for i in live}
+            if len(keys) > 1:
+                raise ValueError(
+                    f"run_pack requires one coalesce_key per pack, got {len(keys)}: "
+                    f"{sorted(keys)}"
+                )
+            if self.mesh is not None:
+                for i in live:
+                    ms = self.run(qs[i], collect_matches=cfg.collect_matches)
+                    ms.query_index = i
+                    out[i] = ms
+            else:
+                for j in range(0, len(live), pack_size):
+                    for ms in self._run_pack(live[j:j + pack_size], qs, cfg, pack_size):
+                        out[ms.query_index] = ms
+        assert all(m is not None for m in out), "run_pack dropped a query"
+        return out  # type: ignore[return-value]
+
     def stream(
         self,
         queries: Iterable[Union[Query, Graph]],
@@ -655,13 +756,7 @@ class Enumerator:
             if not q.plan.satisfiable:
                 yield self._matchset(q, i, _empty_engine_result(), 0.0)
             else:
-                key = q.bucket
-                if eng.resolve_step_backend(cfg, q.plan.n_t) == "csr":
-                    # csr plan arrays carry target-density-dependent shapes
-                    # (deg_cap, nnz); only same-shape plans can stack into
-                    # one vmapped pack
-                    key = key + extend.csr_shape_bucket(q.plan)
-                groups.setdefault(key, []).append(i)
+                groups.setdefault(self.coalesce_key(q, cfg), []).append(i)
 
         for idxs in groups.values():
             weights = [_predict_work(qs[i].plan) for i in idxs]

@@ -1,0 +1,32 @@
+"""Always-on enumeration serving layer (DESIGN.md §7).
+
+Admission → coalescing → execution over the `repro.core.session` API:
+
+  service    — EnumerationService: the long-lived server + dispatcher
+  admission  — bounded FIFO, per-tenant quotas, backpressure
+  coalescer  — continuous same-bucket batching (lane budget / time window)
+  stream     — per-client ResultStream handles (chunks + terminal status)
+  metrics    — counters, latency percentiles, QPS, occupancy, cache stats
+
+Entry point: ``python -m repro.launch.serve --smoke``.
+"""
+
+from repro.serve.admission import Backpressure, QuotaExceeded
+from repro.serve.coalescer import Coalescer
+from repro.serve.metrics import ServiceMetrics, format_snapshot
+from repro.serve.service import EnumerationService, ServiceConfig
+from repro.serve.stream import ResultChunk, ResultStatus, ResultStream, ServiceError
+
+__all__ = [
+    "Backpressure",
+    "Coalescer",
+    "EnumerationService",
+    "QuotaExceeded",
+    "ResultChunk",
+    "ResultStatus",
+    "ResultStream",
+    "ServiceConfig",
+    "ServiceError",
+    "ServiceMetrics",
+    "format_snapshot",
+]

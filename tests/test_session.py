@@ -11,6 +11,7 @@ from repro.core import (
     Enumerator,
     SubgraphIndex,
     enumerate_subgraphs,
+    prepare_query,
     snap_p_pad,
 )
 from repro.core.graph import Graph
@@ -182,6 +183,83 @@ def test_index_picklable_and_reusable(rng):
     b = Enumerator(index2, config=CFG)
     pa, pb = a.prepare(pats[0]), b.prepare(pats[0])
     assert (a.run(pa).matches, a.run(pa).states) == (b.run(pb).matches, b.run(pb).states)
+
+
+def test_cache_lru_eviction_bounded(rng):
+    """A bounded session must cap its engine cache: LRU entries evict,
+    the evictions counter records them, and evicted engines recompile
+    correctly on reuse (counts unchanged)."""
+    tgt_a = random_graph(rng, 40, 120, n_labels=2)
+    tgt_b = random_graph(rng, 30, 80, n_labels=2)  # different n_t: own bucket
+    pa = extract_connected_pattern(rng, tgt_a, 3)
+    pb = extract_connected_pattern(rng, tgt_b, 3)
+    s = Enumerator(config=CFG, max_cache_entries=1)
+    qa = prepare_query(pa, tgt_a)
+    qb = prepare_query(pb, tgt_b)
+    first = s.run(qa)
+    assert s.cache_stats() == {"compiles": 1, "cache_hits": 0, "evictions": 0,
+                               "entries": 1, "max_entries": 1}
+    s.run(qb)  # second bucket evicts the first engine
+    assert s.cache_stats()["evictions"] == 1
+    assert s.cache_stats()["entries"] == 1
+    again = s.run(qa)  # evicted: recompiles, same result
+    stats = s.cache_stats()
+    assert stats["compiles"] == 3 and stats["cache_hits"] == 0
+    assert stats["evictions"] == 2 and stats["entries"] == 1
+    assert (again.matches, again.states) == (first.matches, first.states)
+
+
+def test_cache_lru_hit_refreshes_recency(rng):
+    """A cache hit must move the entry to most-recent: with capacity 2,
+    touching A before inserting C evicts B, not A."""
+    tgts = [random_graph(rng, 30 + 10 * i, 80 + 20 * i, n_labels=2)
+            for i in range(3)]
+    qs = [prepare_query(extract_connected_pattern(rng, t, 3), t) for t in tgts]
+    s = Enumerator(config=CFG, max_cache_entries=2)
+    s.run(qs[0])           # cache: [A]
+    s.run(qs[1])           # cache: [A, B]
+    s.run(qs[0])           # hit refreshes A -> cache: [B, A]
+    s.run(qs[2])           # evicts B      -> cache: [A, C]
+    compiles_before = s.cache_stats()["compiles"]
+    s.run(qs[0])           # must still be a hit
+    stats = s.cache_stats()
+    assert stats["compiles"] == compiles_before == 3
+    assert stats["cache_hits"] == 2 and stats["evictions"] == 1
+
+
+def test_cache_unbounded_by_default(rng):
+    s = Enumerator(config=CFG)
+    assert s.max_cache_entries == 0
+    assert s.cache_stats()["max_entries"] == 0
+    with pytest.raises(ValueError, match="max_cache_entries"):
+        Enumerator(config=CFG, max_cache_entries=-1)
+
+
+def test_run_pack_hook_matches_run(rng):
+    """The serving layer's batch-submission hook: one padded pack, results
+    in input order, identical to per-query run(); mixed coalesce keys are
+    refused."""
+    tgt, pats = _corpus(rng, n_pats=5)
+    index = SubgraphIndex.build(tgt)
+    s = Enumerator(index, config=CFG)
+    qs = [s.prepare(p, name=f"q{i}") for i, p in enumerate(pats)]
+    singles = [s.run(q) for q in qs]
+    packed = s.run_pack(qs, pack_size=4)
+    assert [ms.query_index for ms in packed] == list(range(len(qs)))
+    for one, ms in zip(singles, packed):
+        assert (one.matches, one.states) == (ms.matches, ms.states)
+
+    other = random_graph(rng, 25, 60, n_labels=3)
+    qo = prepare_query(extract_connected_pattern(rng, other, 3), other)
+    with pytest.raises(ValueError, match="coalesce_key"):
+        s.run_pack([qs[0], qo])
+
+    # unsatisfiable lanes come back empty, order preserved, engine untouched
+    bad = Graph.from_edges(2, [(0, 1)], labels=[99, 0], undirected=True)
+    mixed = s.run_pack([qs[0], s.prepare(bad), qs[1]], pack_size=4)
+    assert [ms.query_index for ms in mixed] == [0, 1, 2]
+    assert mixed[1].matches == 0
+    assert (mixed[0].matches, mixed[2].matches) == (singles[0].matches, singles[1].matches)
 
 
 def test_overflow_retries_once_with_doubled_cap(rng):

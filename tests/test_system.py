@@ -77,22 +77,14 @@ def test_train_driver_loss_improves(tmp_path):
     assert history[-1] < history[0], "training must reduce loss"
 
 
-def test_serve_driver_generates():
-    from repro.launch.serve import generate
-    from repro.models import transformer as tf
-    from repro.models.transformer import LMConfig
+def test_serve_driver_smoke():
+    """The always-on service entrypoint (DESIGN.md §7): N synthetic
+    clients through one EnumerationService, streamed results verified
+    against standalone runs inside the driver itself."""
+    from repro.launch.serve import main
 
-    cfg = LMConfig(name="sys-serve", n_layers=2, d_model=32, n_heads=4,
-                   n_kv_heads=2, d_ff=64, vocab_size=64, activation="swiglu",
-                   max_seq_len=32, loss_chunk=16, kv_block=8)
-    params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 64)
-    out = generate(params, cfg, prompts.astype(jnp.int32), max_new=5)
-    assert out.shape == (2, 11)
-    assert bool(jnp.all((out >= 0) & (out < 64)))
-    # greedy decode is deterministic
-    out2 = generate(params, cfg, prompts.astype(jnp.int32), max_new=5)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    assert main(["--smoke", "--clients", "2", "--queries", "2",
+                 "--target-n", "36", "--no-csr", "--window-ms", "1"]) == 0
 
 
 def test_work_stealing_transfers_happen():
