@@ -5,6 +5,9 @@ Layers:
   ordering   — RI GreatestConstraintFirst ordering (+ SI tie-break)
   domains    — RI-DS domains: init, arc consistency, forward checking
   plan       — SearchPlan: static arrays for the engine
+  delta      — dynamic-graph delta algebra: GraphDelta edit sets,
+               edge-anchored seeding, match invalidation / dedup,
+               DeltaMatchSet (DESIGN.md §8)
   frontier   — ring-buffer worker stacks: SoA state + pop/push/compact ops
   extend     — the expansion step behind the StepBackend seam
                (jnp reference / fused Pallas extend_step kernel /
@@ -20,8 +23,9 @@ Layers:
 """
 
 from repro.core.api import EnumerationResult, enumerate_subgraphs
+from repro.core.delta import DeltaMatchSet, GraphDelta
 from repro.core.engine import EngineConfig, EngineResult
-from repro.core.graph import Graph, PackedGraph
+from repro.core.graph import CsrPlaneSet, Graph, PackedGraph
 from repro.core.plan import SearchPlan, VARIANTS, build_plan
 from repro.core.session import (
     Enumerator,
@@ -34,12 +38,15 @@ from repro.core.session import (
 )
 
 __all__ = [
+    "CsrPlaneSet",
+    "DeltaMatchSet",
     "EnumerationResult",
     "enumerate_subgraphs",
     "EngineConfig",
     "EngineResult",
     "Enumerator",
     "Graph",
+    "GraphDelta",
     "MatchSet",
     "PackedGraph",
     "Query",

@@ -56,7 +56,12 @@ from jax.sharding import PartitionSpec
 
 from repro.core import frontier
 from repro.core.frontier import EngineState
-from repro.core.graph import WORD_BITS, CsrPlanes, csr_planes_from_bitmaps
+from repro.core.graph import (
+    WORD_BITS,
+    CsrPlanes,
+    bitmap_from_indices,
+    csr_planes_from_bitmaps,
+)
 from repro.core.plan import SearchPlan
 
 if TYPE_CHECKING:  # engine imports extend; annotations only
@@ -96,14 +101,18 @@ class PlanArrays(NamedTuple):
     n_p: jnp.ndarray  # scalar int32 (actual pattern size)
 
 
-def make_plan_arrays(plan: SearchPlan) -> PlanArrays:
+def make_plan_arrays(plan: SearchPlan, adj_bits=None) -> PlanArrays:
+    """``adj_bits`` optionally supplies an already device-resident
+    adjacency buffer (the dominant transfer) so same-version plans — a
+    query plan and its delta anchor plans — share one host→device copy."""
     return PlanArrays(
         order_valid=jnp.asarray(plan.order >= 0),
         parent_pos=jnp.asarray(plan.parent_pos, jnp.int32),
         parent_dir=jnp.asarray(plan.parent_dir, jnp.int32),
         parent_elab=jnp.asarray(plan.parent_elab, jnp.int32),
         dom_bits=jnp.asarray(plan.dom_bits, jnp.uint32),
-        adj_bits=jnp.asarray(plan.adj_bits, jnp.uint32),
+        adj_bits=(jnp.asarray(plan.adj_bits, jnp.uint32)
+                  if adj_bits is None else adj_bits),
         n_p=jnp.asarray(plan.n_p, jnp.int32),
     )
 
@@ -189,6 +198,21 @@ def _pad_nnz(nnz: int) -> int:
     return max(1024, ((nnz + 1023) // 1024) * 1024)
 
 
+def _plan_csr(plan: SearchPlan) -> CsrPlanes:
+    """The plan's CSR planes, resolved once and cached on the plan:
+    explicit ``plan.csr`` (CSR-only plans) wins, then ``plan.csr_factory``
+    (session-built plans share the index's incrementally patched plane set,
+    DESIGN.md §8), then a fresh dense→sparse conversion."""
+    cp = plan.csr
+    if cp is None:
+        if plan.csr_factory is not None:
+            cp = plan.csr_factory()
+        else:
+            cp = csr_planes_from_bitmaps(np.asarray(plan.adj_bits))
+        plan.csr = cp  # cache: conversion is O(n_t · w) host work
+    return cp
+
+
 def make_csr_plan_arrays(plan: SearchPlan) -> CsrPlanArrays:
     """Build :class:`CsrPlanArrays` from a :class:`SearchPlan`.
 
@@ -198,10 +222,7 @@ def make_csr_plan_arrays(plan: SearchPlan) -> CsrPlanArrays:
     (`repro.core.graph.csr_planes_from_bitmaps`), which is what lets the
     conformance suite run every backend on one plan.
     """
-    cp = plan.csr
-    if cp is None:
-        cp = csr_planes_from_bitmaps(np.asarray(plan.adj_bits))
-        plan.csr = cp  # cache: conversion is O(n_t · w) host work
+    cp = _plan_csr(plan)
     deg_cap = _pad_deg_cap(cp.deg_cap)
     nnz_pad = _pad_nnz(cp.nnz)
     indices = np.full(nnz_pad + deg_cap, CSR_SENTINEL, dtype=np.int32)
@@ -287,10 +308,13 @@ def resolve_step_backend_for_plan(cfg: "EngineConfig", plan: SearchPlan) -> str:
     return resolve_step_backend(cfg, plan.n_t)
 
 
-def plan_arrays_for(cfg: "EngineConfig", plan: SearchPlan) -> AnyPlanArrays:
+def plan_arrays_for(cfg: "EngineConfig", plan: SearchPlan,
+                    adj_bits=None) -> AnyPlanArrays:
     """The one plan-array construction point for both drivers and the
     session: dense :class:`PlanArrays` or sparse :class:`CsrPlanArrays`
-    per the resolved step backend."""
+    per the resolved step backend.  ``adj_bits`` passes a pre-transferred
+    device adjacency through to :func:`make_plan_arrays` (ignored by the
+    CSR layout, which never ships the dense bitmaps)."""
     if resolve_step_backend_for_plan(cfg, plan) == "csr":
         return make_csr_plan_arrays(plan)
     if is_csr_only(plan):
@@ -298,7 +322,7 @@ def plan_arrays_for(cfg: "EngineConfig", plan: SearchPlan) -> AnyPlanArrays:
             "plan is CSR-only (built by build_csr_plan: dense adj_bits were "
             "never materialized) — run it with step_backend='csr' or 'auto'"
         )
-    return make_plan_arrays(plan)
+    return make_plan_arrays(plan, adj_bits=adj_bits)
 
 
 def csr_shape_bucket(plan: SearchPlan) -> Tuple[int, int]:
@@ -306,11 +330,7 @@ def csr_shape_bucket(plan: SearchPlan) -> Tuple[int, int]:
     extra pack-grouping key the session needs under the csr backend: two
     same-``(n_t, w)`` targets of different density have differently shaped
     :class:`CsrPlanArrays` and cannot share a vmapped pack lane."""
-    cp = plan.csr
-    if cp is None:
-        cp = csr_planes_from_bitmaps(np.asarray(plan.adj_bits))
-        plan.csr = cp
-    return (_pad_deg_cap(cp.deg_cap), _pad_nnz(cp.nnz))
+    return (_pad_deg_cap(_plan_csr(plan).deg_cap), _pad_nnz(_plan_csr(plan).nnz))
 
 
 def plan_partition_specs_for(cfg: "EngineConfig", n_t: int, csr_only: bool = False):
@@ -373,6 +393,39 @@ def compute_cand_jnp(
         return jnp.where(pp >= 0, c & row, c)
 
     return lax.fori_loop(0, mp, body, cand)
+
+
+def host_cand_bitmap(plan: SearchPlan, pos: int, mapping: np.ndarray) -> np.ndarray:
+    """Host (numpy) twin of :func:`compute_cand_jnp` for one entry.
+
+    ``mapping`` is a ``[p_pad]`` int array whose positions ``< pos`` hold the
+    partial embedding (-1 elsewhere); returns the ``[w]`` uint32 candidate
+    bitmap ``dom[pos] ∧ ¬used ∧ ⋀_parents adj_row`` with exactly the
+    engine's semantics.  The delta seeding path (DESIGN.md §8) uses this to
+    pre-validate engine seeds — the engine trusts stored candidate bitmaps
+    and never re-checks them.  Works for dense and CSR-only plans.
+    """
+    pos = int(pos)
+    prefix = np.asarray(mapping[:pos], dtype=np.int64)
+    used = bitmap_from_indices(prefix[prefix >= 0], plan.n_t, plan.w)
+    cand = plan.dom_bits[pos] & ~used
+    dense = plan.adj_bits.shape[2] > 0
+    cp = None if dense else _plan_csr(plan)
+    for j in range(plan.max_parents):
+        pp = int(plan.parent_pos[pos, j])
+        if pp < 0:
+            continue
+        t = int(mapping[pp])
+        pd = int(plan.parent_dir[pos, j])
+        pl = int(plan.parent_elab[pos, j])
+        if dense:
+            row = plan.adj_bits[pl, pd, t]
+        else:
+            plane = pl * 2 + pd
+            s, e = int(cp.indptr[plane, t]), int(cp.indptr[plane, t + 1])
+            row = bitmap_from_indices(cp.indices[s:e], plan.n_t, plan.w)
+        cand = cand & row
+    return cand
 
 
 # ---------------------------------------------------------------------------

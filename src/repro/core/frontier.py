@@ -275,6 +275,77 @@ def init_state(plan: SearchPlan, cfg: "EngineConfig") -> EngineState:
     )
 
 
+def init_delta_state(
+    plan: SearchPlan,
+    cfg: "EngineConfig",
+    seed_depth: np.ndarray,
+    seed_map: np.ndarray,
+    seed_cand: np.ndarray,
+) -> EngineState:
+    """Seeded :class:`EngineState` for delta enumeration (DESIGN.md §8).
+
+    Instead of :func:`init_state`'s depth-0 root split, worker stacks start
+    from the given partial-embedding entries — one per inserted target edge
+    anchored onto a pattern edge.  ``seed_depth [K]`` / ``seed_map [K,
+    p_pad]`` / ``seed_cand [K, w]`` must already be engine-valid
+    (`repro.core.extend.host_cand_bitmap` semantics: candidate bits are
+    trusted, never re-checked).  Seeds are dealt round-robin across the
+    ``V`` workers; the caller chunks ``K`` so no worker exceeds the stack
+    capacity.
+    """
+    v = cfg.n_workers
+    p_pad, w = plan.p_pad, plan.w
+    s_cap = cfg.resolved_stack_cap(p_pad)
+    mcap = max(1, cfg.collect_matches)
+
+    seed_depth = np.asarray(seed_depth, dtype=np.int32)
+    seed_map = np.asarray(seed_map, dtype=np.int32)
+    seed_cand = np.asarray(seed_cand, dtype=np.uint32)
+    k = int(seed_depth.shape[0])
+    per_worker = -(-k // v) if k else 0
+    if per_worker > s_cap - 1:
+        raise ValueError(
+            f"{k} delta seeds over {v} workers exceed stack_cap={s_cap}; "
+            "chunk the seed batch"
+        )
+
+    st_depth = np.zeros((v, s_cap), dtype=np.int32)
+    st_map = np.full((v, s_cap, p_pad), -1, dtype=np.int32)
+    st_used = np.zeros((v, s_cap, w if cfg.store_used else 1), dtype=np.uint32)
+    st_cand = np.zeros((v, s_cap, w), dtype=np.uint32)
+    size = np.zeros((v,), dtype=np.int32)
+    for i in range(k):
+        wk = i % v
+        slot = size[wk]
+        st_depth[wk, slot] = seed_depth[i]
+        st_map[wk, slot] = seed_map[i]
+        st_cand[wk, slot] = seed_cand[i]
+        if cfg.store_used:
+            prefix = seed_map[i, : seed_depth[i]].astype(np.int64)
+            st_used[wk, slot] = bitmap_from_indices(
+                prefix[prefix >= 0], plan.n_t, w
+            )
+        size[wk] = slot + 1
+
+    return EngineState(
+        st_depth=jnp.asarray(st_depth),
+        st_map=jnp.asarray(st_map),
+        st_used=jnp.asarray(st_used),
+        st_cand=jnp.asarray(st_cand),
+        base=jnp.zeros((v,), jnp.int32),
+        size=jnp.asarray(size),
+        matches=jnp.zeros((v,), jnp.int32),
+        states=jnp.zeros((v,), jnp.int32),
+        exp_depth=jnp.zeros((v,), jnp.int32),
+        steals=jnp.zeros((v,), jnp.int32),
+        steal_depth=jnp.zeros((v,), jnp.int32),
+        steal_rounds=jnp.zeros((), jnp.int32),
+        steps=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.bool_),
+        match_buf=jnp.full((v, mcap, p_pad), -1, jnp.int32),
+    )
+
+
 def state_partition_specs(axis: str) -> EngineState:
     """PartitionSpecs for :class:`EngineState`: worker-axis arrays sharded
     over ``axis``, loop scalars replicated."""

@@ -265,6 +265,114 @@ class CsrPlanes:
         return int(self.indptr.nbytes + self.indices.nbytes)
 
 
+@dataclasses.dataclass(frozen=True)
+class CsrPlaneSet:
+    """Per-plane CSR adjacency with independently owned buffers — the
+    mutable-friendly twin of :class:`CsrPlanes` behind
+    ``SubgraphIndex.update()`` (DESIGN.md §8).
+
+    :class:`CsrPlanes` stores every plane in one flat ``indices`` array, so
+    patching a single row would force a full copy of all planes.  Here each
+    plane ``p = elab * 2 + dir`` owns its own ``(indptr, indices)`` pair:
+    :meth:`patched` rebuilds only the planes a delta touches and **shares the
+    other planes' arrays by reference** (asserted by ``id()`` in
+    ``tests/test_incremental_conformance.py``).  :meth:`to_planes` concatenates
+    back to the canonical flat layout without re-sorting — rows are already
+    sorted and deduplicated.
+
+    ``indptrs[p]`` is ``[n_t + 1]`` int64 with plane-local offsets;
+    ``indices[p]`` is ``[nnz_p]`` int32 sorted + deduped per row.
+    """
+
+    n_t: int
+    indptrs: Tuple[np.ndarray, ...]
+    indices: Tuple[np.ndarray, ...]
+
+    @property
+    def n_planes(self) -> int:
+        return len(self.indptrs)
+
+    @property
+    def nnz(self) -> int:
+        return sum(int(ix.shape[0]) for ix in self.indices)
+
+    @staticmethod
+    def from_bitmaps(adj_bits: np.ndarray) -> "CsrPlaneSet":
+        """Split the canonical flat planes of ``adj_bits`` into per-plane
+        buffers (row content bit-identical to :func:`csr_planes_from_bitmaps`)."""
+        flat = csr_planes_from_bitmaps(adj_bits)
+        base = flat.indptr.astype(np.int64)
+        indptrs, indices = [], []
+        for p in range(flat.n_planes):
+            ptr = base[p]
+            indptrs.append(np.ascontiguousarray(ptr - ptr[0]))
+            indices.append(np.ascontiguousarray(flat.indices[ptr[0] : ptr[-1]]))
+        return CsrPlaneSet(n_t=flat.n_t, indptrs=tuple(indptrs), indices=tuple(indices))
+
+    def grown(self, n_planes: int) -> "CsrPlaneSet":
+        """Append empty planes up to ``n_planes`` (existing buffers shared)."""
+        if n_planes <= self.n_planes:
+            return self
+        extra = n_planes - self.n_planes
+        empty_ptr = np.zeros(self.n_t + 1, dtype=np.int64)
+        empty_idx = np.zeros(0, dtype=np.int32)
+        return CsrPlaneSet(
+            n_t=self.n_t,
+            indptrs=self.indptrs + tuple(empty_ptr for _ in range(extra)),
+            indices=self.indices + tuple(empty_idx for _ in range(extra)),
+        )
+
+    def patched(self, plane_rows: dict) -> "CsrPlaneSet":
+        """New plane set with ``plane_rows[p][row] = sorted indices`` spliced
+        in.  Only planes appearing in ``plane_rows`` get new buffers; every
+        other plane's ``(indptr, indices)`` arrays are reused as-is."""
+        indptrs = list(self.indptrs)
+        indices = list(self.indices)
+        for p, rows in plane_rows.items():
+            if not rows:
+                continue
+            ptr, idx = indptrs[p], indices[p]
+            lens = np.diff(ptr)
+            pieces = []
+            prev_end = 0
+            for r in sorted(rows):
+                s, e = int(ptr[r]), int(ptr[r + 1])
+                new_row = np.asarray(rows[r], dtype=np.int32)
+                pieces.append(idx[prev_end:s])
+                pieces.append(new_row)
+                prev_end = e
+                lens[r] = new_row.shape[0]
+            pieces.append(idx[prev_end:])
+            new_ptr = np.zeros(self.n_t + 1, dtype=np.int64)
+            np.cumsum(lens, out=new_ptr[1:])
+            indptrs[p] = new_ptr
+            indices[p] = np.concatenate(pieces) if pieces else idx
+        return CsrPlaneSet(n_t=self.n_t, indptrs=tuple(indptrs), indices=tuple(indices))
+
+    def to_planes(self) -> "CsrPlanes":
+        """Concatenate to the canonical flat :class:`CsrPlanes` layout.
+
+        No re-sorting happens — per-plane rows are already canonical; only
+        the global offsets are recomputed."""
+        offsets = np.zeros(self.n_planes + 1, dtype=np.int64)
+        np.cumsum([ix.shape[0] for ix in self.indices], out=offsets[1:])
+        indptr = np.stack(
+            [self.indptrs[p] + offsets[p] for p in range(self.n_planes)]
+        ).astype(np.int32)
+        flat = (
+            np.concatenate(self.indices)
+            if self.n_planes
+            else np.zeros(0, dtype=np.int32)
+        )
+        deg_cap = max(
+            (int(np.diff(ptr).max()) for ptr in self.indptrs if ptr.shape[0] > 1),
+            default=0,
+        )
+        return CsrPlanes(
+            n_t=self.n_t, indptr=indptr, indices=flat.astype(np.int32), deg_cap=deg_cap
+        )
+
+
 def _assemble_csr_planes(
     row_keys: np.ndarray, cols: np.ndarray, n_planes: int, n_t: int
 ) -> CsrPlanes:
@@ -321,14 +429,10 @@ def bitmap_from_indices(idx: np.ndarray, n: int, w: Optional[int] = None) -> np.
 
 def bitmap_to_indices(bits: np.ndarray) -> np.ndarray:
     """Unpack a ``[w]`` uint32 bitmap into sorted node indices."""
-    out = []
-    for wi, word in enumerate(np.asarray(bits, dtype=np.uint32)):
-        word = int(word)
-        while word:
-            b = word & -word
-            out.append(wi * WORD_BITS + b.bit_length() - 1)
-            word ^= b
-    return np.asarray(out, dtype=np.int64)
+    b = np.asarray(bits, dtype=np.uint32)
+    set_bits = (b[:, None] >> np.arange(WORD_BITS, dtype=np.uint32)) & np.uint32(1)
+    wi, bi = np.nonzero(set_bits)
+    return (wi * WORD_BITS + bi).astype(np.int64)
 
 
 def popcount(bits: np.ndarray) -> np.ndarray:

@@ -84,6 +84,7 @@ def greatest_constraint_first(
     pattern: Graph,
     domain_sizes: Optional[np.ndarray] = None,
     singleton_first: bool = False,
+    seed_order: Optional[Tuple[int, ...]] = None,
 ) -> Ordering:
     """Compute the RI (GreatestConstraintFirst) ordering.
 
@@ -95,6 +96,11 @@ def greatest_constraint_first(
       singleton_first: RI-DS places all pattern nodes with singleton domains
         at the *beginning* of the ordering (paper §4.1).  Requires
         ``domain_sizes``.
+      seed_order: optional forced prefix of pattern node ids placed at the
+        front of the ordering verbatim (duplicates collapsed).  Used by the
+        delta-seeding path (DESIGN.md §8) to anchor a pattern edge's
+        endpoints at positions 0/1; overrides ``singleton_first``'s
+        pre-placement, the greedy criteria still order the rest.
 
     Returns:
       An :class:`Ordering` with per-position parent constraint lists.
@@ -124,8 +130,15 @@ def greatest_constraint_first(
         # deterministic final tie-break on node id (smaller id first)
         return k + (-u,)
 
+    # Delta seeding: anchor endpoints are forced to the front.
+    if seed_order is not None:
+        for u in seed_order:
+            u = int(u)
+            if not in_order[u]:
+                order.append(u)
+                in_order[u] = True
     # RI-DS: singleton domains first (their assignment is forced).
-    if singleton_first and ds is not None:
+    elif singleton_first and ds is not None:
         for u in np.nonzero(ds == 1)[0].tolist():
             order.append(int(u))
             in_order[u] = True

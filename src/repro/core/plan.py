@@ -26,7 +26,7 @@ Variants (paper terminology):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -79,6 +79,19 @@ class SearchPlan:
     # the plan) or lazily derived from adj_bits by the csr plan-array
     # builder (`repro.core.extend.make_csr_plan_arrays`).
     csr: Optional[CsrPlanes] = None
+    # Lazy CsrPlanes supplier (e.g. ``SubgraphIndex.csr_planes`` so that
+    # incrementally patched plane sets are reused instead of re-deriving the
+    # flat planes from adj_bits per plan); consulted by
+    # ``repro.core.extend.make_csr_plan_arrays`` when ``csr`` is unset.
+    csr_factory: Optional[Callable[[], CsrPlanes]] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+    # Node-indexed domain fixpoint the plan was assembled from, retained so
+    # delta anchor plans (``Enumerator._anchor_plans``, DESIGN.md §8) reuse
+    # it instead of re-running AC/FC per index version.
+    domains: Optional[dom_mod.DomainResult] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     @property
     def max_parents(self) -> int:
@@ -100,6 +113,8 @@ def build_plan(
     max_parents: Optional[int] = None,
     ac_iters: Optional[int] = None,
     domains: Optional[dom_mod.DomainResult] = None,
+    anchor: Optional[Tuple[int, ...]] = None,
+    csr_factory: Optional[Callable[[], CsrPlanes]] = None,
 ) -> SearchPlan:
     """Run preprocessing (domains + ordering) and emit a :class:`SearchPlan`.
 
@@ -107,6 +122,12 @@ def build_plan(
     :class:`~repro.core.domains.DomainResult` (the batched device
     preprocessing path, `repro.core.session.Enumerator.prepare_batch`);
     it must match the variant's flags — the session guarantees this.
+
+    ``anchor`` forces the given pattern node ids to the front of the
+    ordering (delta seeding, DESIGN.md §8): an anchor plan for pattern edge
+    ``(pa, pb)`` passes ``(pa, pb)`` so seeds can pin positions 0/1 onto an
+    inserted target edge.  Domains are ordering-independent, so one
+    ``DomainResult`` is shared across all anchor plans of a query.
     """
     flags = variant_flags(variant)
     use_ds, use_si = flags["use_ac"], flags["use_si"]
@@ -127,6 +148,7 @@ def build_plan(
     return _assemble_plan(
         pattern, dres, variant, use_ds, use_si, p_pad, max_parents,
         n_t=target.n, w=target.w, adj_bits=target.adj_bits, csr=None,
+        anchor=anchor, csr_factory=csr_factory,
     )
 
 
@@ -137,6 +159,7 @@ def build_csr_plan(
     p_pad: Optional[int] = None,
     max_parents: Optional[int] = None,
     w: Optional[int] = None,
+    anchor: Optional[Tuple[int, ...]] = None,
 ) -> SearchPlan:
     """Build a **CSR-only** :class:`SearchPlan` straight from a host
     :class:`Graph` — the dense ``[n_elab, 2, n_t, w]`` adjacency bitmaps are
@@ -163,6 +186,7 @@ def build_csr_plan(
         n_t=target.n, w=w,
         adj_bits=np.zeros((n_elab, 2, 0, w), dtype=np.uint32),
         csr=target.csr_planes(n_elab),
+        anchor=anchor,
     )
 
 
@@ -178,6 +202,8 @@ def _assemble_plan(
     w: int,
     adj_bits: np.ndarray,
     csr: Optional[CsrPlanes],
+    anchor: Optional[Tuple[int, ...]] = None,
+    csr_factory: Optional[Callable[[], CsrPlanes]] = None,
 ) -> SearchPlan:
     """Ordering + padded-array assembly shared by :func:`build_plan` and
     :func:`build_csr_plan`."""
@@ -186,7 +212,13 @@ def _assemble_plan(
     # --- ordering ----------------------------------------------------------
     # RI ignores domains when ordering; RI-DS places singletons first (but its
     # greedy tie-break does not see domain sizes); SI adds the size tie-break.
-    if use_si:
+    if anchor is not None:
+        ordering = ord_mod.greatest_constraint_first(
+            pattern,
+            domain_sizes=dom_sizes if use_si else None,
+            seed_order=tuple(anchor),
+        )
+    elif use_si:
         ordering = ord_mod.greatest_constraint_first(
             pattern, domain_sizes=dom_sizes, singleton_first=True
         )
@@ -234,4 +266,6 @@ def _assemble_plan(
         adj_bits=adj_bits,
         satisfiable=dres.satisfiable,
         csr=csr,
+        csr_factory=csr_factory,
+        domains=dres,
     )

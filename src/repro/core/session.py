@@ -55,6 +55,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import hashlib
+import threading
 import time
 import warnings
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
@@ -63,11 +65,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import delta as delta_mod
 from repro.core import domains as dom_mod
 from repro.core import engine as eng
 from repro.core import extend
+from repro.core import frontier
+from repro.core.delta import DeltaMatchSet, GraphDelta
 from repro.core.engine import EngineConfig, EngineResult
-from repro.core.graph import Graph, PackedGraph, popcount
+from repro.core.graph import (
+    WORD_BITS,
+    CsrPlanes,
+    CsrPlaneSet,
+    Graph,
+    PackedGraph,
+    bitmap_to_indices,
+    popcount,
+)
 from repro.core.plan import SearchPlan, build_plan, variant_flags
 from repro.core.scheduler import balance_assignment
 
@@ -105,6 +118,19 @@ def snap_loop_pad(n_loops: int) -> int:
     return 1 if n_loops == 0 else ((n_loops + 3) // 4) * 4
 
 
+def _match_count(old) -> int:
+    """Prior-match count without materializing mappings: a MatchSet-like
+    object carries it as ``.matches`` (an int); anything else is a
+    sequence of mappings."""
+    m = getattr(old, "matches", None)
+    if isinstance(m, int):
+        return m
+    try:
+        return len(old)
+    except TypeError:
+        return len(list(old))
+
+
 def snap_batch_pad(n: int) -> int:
     """Pattern-batch lane bucket: next power of two (inert lanes replicate
     lane 0 and are discarded), so B patterns cost O(log B) compilations."""
@@ -123,6 +149,12 @@ class SubgraphIndex:
     preprocessing (domains, ordering) consults.  Pure numpy — picklable and
     shareable across processes; build once per target, reuse for every
     pattern.
+
+    Indexes are **versioned** (DESIGN.md §8): :meth:`update` produces a new
+    index with incrementally patched bitmaps/CSR planes, ``version + 1``,
+    and a content ``fingerprint`` chained through the edit — the
+    fingerprint keys engine-compile caches and serving coalesce buckets, so
+    a post-update run can never alias a stale compiled plan.
     """
 
     packed: PackedGraph
@@ -130,6 +162,16 @@ class SubgraphIndex:
     label_counts: np.ndarray  # [n_labels] int64
     max_degree: int
     build_s: float
+    version: int = 0
+    fingerprint: str = ""
+    # lazily built sparse adjacency, shared across versions per plane
+    # (update() patches only touched planes — see graph.CsrPlaneSet)
+    _plane_set: Optional[CsrPlaneSet] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _csr_flat: Optional[CsrPlanes] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @staticmethod
     def build(target: Union[Graph, PackedGraph, "SubgraphIndex"]) -> "SubgraphIndex":
@@ -147,6 +189,8 @@ class SubgraphIndex:
             label_counts=counts,
             max_degree=max_deg,
             build_s=time.perf_counter() - t0,
+            version=0,
+            fingerprint=_fingerprint_packed(packed),
         )
 
     @property
@@ -160,6 +204,166 @@ class SubgraphIndex:
     @property
     def n_edge_labels(self) -> int:
         return self.packed.n_edge_labels
+
+    # -- sparse adjacency (shared with plans via SearchPlan.csr_factory) ---
+
+    def plane_set(self) -> CsrPlaneSet:
+        """Per-plane CSR adjacency, built lazily and patched (not rebuilt)
+        by :meth:`update` — untouched planes share buffers across versions."""
+        if self._plane_set is None:
+            object.__setattr__(
+                self, "_plane_set", CsrPlaneSet.from_bitmaps(self.packed.adj_bits)
+            )
+        return self._plane_set
+
+    def csr_planes(self) -> CsrPlanes:
+        """Canonical flat :class:`CsrPlanes` of this index version (cached);
+        plans built against this index consume it through their
+        ``csr_factory`` so the csr step backend never re-derives planes from
+        the dense bitmaps."""
+        if self._csr_flat is None:
+            object.__setattr__(self, "_csr_flat", self.plane_set().to_planes())
+        return self._csr_flat
+
+    # -- incremental update (DESIGN.md §8) ---------------------------------
+
+    def update(
+        self,
+        add_edges: Iterable = (),
+        remove_edges: Iterable = (),
+    ) -> Tuple["SubgraphIndex", GraphDelta]:
+        """Apply an edge edit, returning ``(new_index, delta)``.
+
+        Edits are ``(u, v)`` or ``(u, v, elab)`` arc triples with set
+        semantics: duplicate inserts and removals of absent arcs are
+        dropped, and an arc both inserted and removed in the *same* call
+        cancels before anything is applied (no-op delta ≡ empty).  A true
+        no-op returns ``self`` unchanged (same object, same version).
+
+        The new index patches copies of the dense bitmaps in place (bit
+        flips on touched rows), re-sorts only the touched rows of the
+        touched CSR planes (untouched planes share buffers by reference),
+        recomputes degrees for touched nodes only, and shares the label
+        arrays.  Node set and node labels are immutable; inserting an arc
+        with a new edge label grows the plane axis.
+
+        Degrees are recomputed from the patched bitmaps, i.e. as
+        *distinct-arc* counts — for an index built from an arc list with
+        duplicates (``Graph.from_edges(undirected=True)`` doubles
+        self-loop arcs) a touched node's degree normalizes to its
+        distinct count.  Both counts are sound for the domain filters;
+        build from a deduped arc list when exact degree parity with a
+        fresh build matters.
+        """
+        t0 = time.perf_counter()
+        adds = delta_mod.normalize_edges(add_edges)
+        rems = delta_mod.normalize_edges(remove_edges)
+        cancel = set(adds) & set(rems)
+        packed = self.packed
+        n, w, nl = packed.n, packed.w, packed.n_edge_labels
+        for (u, v, l) in tuple(adds) + tuple(rems):
+            if not (0 <= u < n and 0 <= v < n):
+                raise ValueError(f"edit arc ({u}, {v}) out of range for n={n}")
+            if l < 0:
+                raise ValueError(f"negative edge label {l}")
+
+        def present(t) -> bool:
+            u, v, l = t
+            if l >= nl:
+                return False
+            return bool((int(packed.adj_bits[l, 0, u, v // WORD_BITS])
+                         >> (v % WORD_BITS)) & 1)
+
+        eff_add = tuple(t for t in adds if t not in cancel and not present(t))
+        eff_rem = tuple(t for t in rems if t not in cancel and present(t))
+        if not eff_add and not eff_rem:
+            return self, GraphDelta(
+                added=(), removed=(),
+                old_version=self.version, new_version=self.version,
+                old_fingerprint=self.fingerprint,
+                new_fingerprint=self.fingerprint,
+            )
+
+        nl_new = max(nl, 1 + max((l for (_, _, l) in eff_add), default=-1))
+        if nl_new > nl:
+            adj = np.zeros((nl_new, 2, n, w), dtype=np.uint32)
+            adj[:nl] = packed.adj_bits
+        else:
+            adj = packed.adj_bits.copy()
+        for (u, v, l) in eff_add:
+            adj[l, 0, u, v // WORD_BITS] |= np.uint32(1) << np.uint32(v % WORD_BITS)
+            adj[l, 1, v, u // WORD_BITS] |= np.uint32(1) << np.uint32(u % WORD_BITS)
+        for (u, v, l) in eff_rem:
+            adj[l, 0, u, v // WORD_BITS] &= ~(np.uint32(1) << np.uint32(v % WORD_BITS))
+            adj[l, 1, v, u // WORD_BITS] &= ~(np.uint32(1) << np.uint32(u % WORD_BITS))
+
+        # degrees: recompute touched endpoints from the patched bitmaps
+        # (set semantics — identical to a fresh build of the edited graph)
+        deg_out = packed.deg_out.copy()
+        deg_in = packed.deg_in.copy()
+        touched_src = np.fromiter(
+            {u for (u, _, _) in eff_add + eff_rem}, dtype=np.int64)
+        touched_dst = np.fromiter(
+            {v for (_, v, _) in eff_add + eff_rem}, dtype=np.int64)
+        if len(touched_src):
+            deg_out[touched_src] = popcount(adj[:, 0, touched_src, :]).sum(axis=0)
+        if len(touched_dst):
+            deg_in[touched_dst] = popcount(adj[:, 1, touched_dst, :]).sum(axis=0)
+
+        new_packed = PackedGraph(
+            n=n, w=w, adj_bits=adj, labels=packed.labels,
+            deg_out=deg_out, deg_in=deg_in,
+        )
+
+        # CSR plane set: patch only touched (plane, row) pairs; untouched
+        # plane buffers are shared by reference (satellite aliasing test)
+        new_plane_set = None
+        if self._plane_set is not None:
+            rows_of: Dict[int, Dict[int, np.ndarray]] = {}
+            for (u, v, l) in eff_add + eff_rem:
+                rows_of.setdefault(l * 2, {})[u] = None
+                rows_of.setdefault(l * 2 + 1, {})[v] = None
+            for p, rows in rows_of.items():
+                for r in rows:
+                    rows[r] = bitmap_to_indices(adj[p // 2, p % 2, r])
+            new_plane_set = self.plane_set().grown(2 * nl_new).patched(rows_of)
+
+        h = hashlib.blake2b(digest_size=16)
+        h.update(self.fingerprint.encode())
+        h.update(repr((eff_add, eff_rem)).encode())
+        new_fp = h.hexdigest()
+
+        degs = deg_out + deg_in
+        new_index = SubgraphIndex(
+            packed=new_packed,
+            n_labels=self.n_labels,
+            label_counts=self.label_counts,
+            max_degree=int(degs.max()) if n else 0,
+            build_s=time.perf_counter() - t0,
+            version=self.version + 1,
+            fingerprint=new_fp,
+            _plane_set=new_plane_set,
+        )
+        delta = GraphDelta(
+            added=eff_add,
+            removed=eff_rem,
+            old_version=self.version,
+            new_version=new_index.version,
+            old_fingerprint=self.fingerprint,
+            new_fingerprint=new_fp,
+        )
+        return new_index, delta
+
+
+def _fingerprint_packed(packed: PackedGraph) -> str:
+    """Content fingerprint of a packed target: shapes + adjacency bits +
+    node labels.  Chain-extended by :meth:`SubgraphIndex.update` so every
+    index version has a distinct, deterministic identity."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((packed.n, packed.w, packed.adj_bits.shape)).encode())
+    h.update(np.ascontiguousarray(packed.adj_bits).tobytes())
+    h.update(np.ascontiguousarray(packed.labels).tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -179,12 +383,34 @@ class Query:
     variant: str
     name: str
     prepare_s: float
+    # The index this query was prepared against (None for hand-built
+    # queries): run_delta needs it for anchor plans, and its fingerprint
+    # versions the engine-cache / coalesce keys (DESIGN.md §8).
+    index: Optional[SubgraphIndex] = dataclasses.field(default=None, repr=False)
+    # per-anchor plan cache for run_delta: {(pa, pb, elab): SearchPlan}
+    _anchors: Dict[Tuple[int, int, int], SearchPlan] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    _anchor_domains: Optional[dom_mod.DomainResult] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def bucket(self) -> Tuple[int, int, int, int, int]:
-        """The compile-cache shape key: (p_pad, max_parents, n_t, w, n_elab)."""
+        """The compile-cache shape key: (p_pad, max_parents, n_t, w, n_elab).
+
+        Shape-only on purpose — same-shape queries against one index share
+        compiled engines; the *content* identity rides separately as
+        :attr:`index_fingerprint` in the engine-cache and coalesce keys.
+        """
         p = self.plan
         return (p.p_pad, p.max_parents, p.n_t, p.w, p.n_edge_labels)
+
+    @property
+    def index_fingerprint(self) -> str:
+        """Fingerprint of the index version this query binds to ("" for
+        hand-built queries with no index)."""
+        return self.index.fingerprint if self.index is not None else ""
 
     @property
     def satisfiable(self) -> bool:
@@ -208,6 +434,7 @@ def prepare_query(
         variant=variant,
         p_pad=p_pad if p_pad is not None else snap_p_pad(pattern.n),
         max_parents=max_parents if max_parents is not None else DEFAULT_MAX_PARENTS,
+        csr_factory=index.csr_planes,
     )
     return Query(
         pattern=pattern,
@@ -215,6 +442,7 @@ def prepare_query(
         variant=variant,
         name=name or _default_name(pattern),
         prepare_s=time.perf_counter() - t0,
+        index=index,
     )
 
 
@@ -358,6 +586,32 @@ class Enumerator:
         # evict from the front once max_cache_entries is exceeded (0 = no
         # bound — batch scripts; servers set a bound, DESIGN.md §7).
         self._engines: "collections.OrderedDict[tuple, Callable]" = collections.OrderedDict()
+        # shape-keyed XLA trace pool backing the fingerprinted entries in
+        # _engines: index versions of one shape share a single trace
+        # (bounded by shape diversity, not by version count)
+        self._traces: Dict[tuple, Callable] = {}
+        # entries per trace shape: LRU-evicting the last entry of a shape
+        # drops its trace too, so max_cache_entries still bounds compiled
+        # memory.  invalidate_index decrements but keeps zero-ref traces:
+        # an index update never changes array shapes (n is immutable), so
+        # the next version re-uses the trace immediately — dropping it
+        # there would recreate the per-version retrace the pool exists to
+        # avoid (DESIGN.md §8).
+        self._trace_refs: Dict[tuple, int] = {}
+        # sticky high-water match-buffer size for seeded delta runs (see
+        # _run_seeded): grow-retries fold into one steady-state shape
+        self._delta_mcap = self._DELTA_MCAP
+        # device-resident adjacency bitmaps keyed by index fingerprint:
+        # the dominant host→device transfer, shared by a version's query
+        # plan and every delta anchor plan (kept to the two most recent
+        # versions — old + new during an update handoff)
+        self._adj_device: "collections.OrderedDict[str, jnp.ndarray]" = (
+            collections.OrderedDict()
+        )
+        # guards _engines: the serving dispatcher thread runs engines while
+        # service.update_index() invalidates stale entries from a client
+        # thread (DESIGN.md §8)
+        self._cache_lock = threading.Lock()
         # target-side device arrays for batched domain preprocessing, keyed
         # by the packed target's identity (pinned so ids can't be recycled)
         self._dom_targets: Dict[int, Tuple[PackedGraph, dom_mod.TargetDomainArrays]] = {}
@@ -385,40 +639,92 @@ class Enumerator:
 
     def _cache_put(self, key: tuple, fn: Callable) -> None:
         """Insert a jitted engine, LRU-evicting past ``max_cache_entries``."""
-        self._engines[key] = fn
-        if self.max_cache_entries:
-            while len(self._engines) > self.max_cache_entries:
-                self._engines.popitem(last=False)
-                self.evictions += 1
+        with self._cache_lock:
+            if key not in self._engines:
+                sk = key[:-1]
+                self._trace_refs[sk] = self._trace_refs.get(sk, 0) + 1
+            self._engines[key] = fn
+            if self.max_cache_entries:
+                while len(self._engines) > self.max_cache_entries:
+                    old_key, _ = self._engines.popitem(last=False)
+                    self.evictions += 1
+                    self._release_trace_locked(old_key, drop_if_unused=True)
+
+    def _release_trace_locked(self, key: tuple, drop_if_unused: bool) -> None:
+        """One engine-cache entry for ``key`` went away; decrement its
+        trace shape's refcount and (for LRU eviction) drop an unreferenced
+        trace so the entry bound still bounds compiled memory."""
+        sk = key[:-1]
+        n = self._trace_refs.get(sk, 0) - 1
+        if n > 0:
+            self._trace_refs[sk] = n
+        else:
+            self._trace_refs.pop(sk, None)
+            if drop_if_unused:
+                self._traces.pop(sk, None)
 
     def _cache_get(self, key: tuple) -> Optional[Callable]:
-        fn = self._engines.get(key)
-        if fn is not None:
-            self._engines.move_to_end(key)
-            self.cache_hits += 1
-        return fn
+        with self._cache_lock:
+            fn = self._engines.get(key)
+            if fn is not None:
+                self._engines.move_to_end(key)
+                self.cache_hits += 1
+            return fn
+
+    def invalidate_index(self, fingerprint: str) -> int:
+        """Drop every compile-cache entry keyed to ``fingerprint`` (an
+        index version retired by ``SubgraphIndex.update``) and return the
+        number dropped.  The serving layer calls this on index swap so
+        stale engines stop occupying the LRU; correctness never depends on
+        it — the fingerprint in the key already prevents false hits."""
+        if not fingerprint:
+            return 0
+        with self._cache_lock:
+            stale = [k for k in self._engines if fingerprint in k]
+            for k in stale:
+                del self._engines[k]
+                # keep zero-ref traces: the successor version has the same
+                # shapes and re-uses them without a retrace
+                self._release_trace_locked(k, drop_if_unused=False)
+            self._adj_device.pop(fingerprint, None)
+            return len(stale)
 
     def _engine_fn(self, cfg: EngineConfig, kind: str, pack: int, query: Query) -> Callable:
-        key = (cfg, kind, pack, eng.mesh_signature(self.mesh)) + query.bucket
+        shape_key = (cfg, kind, pack, eng.mesh_signature(self.mesh)) + query.bucket
         if eng.resolve_step_backend_for_plan(cfg, query.plan) == "csr":
             # csr plan arrays carry density-dependent shapes (deg_cap, nnz);
             # without them in the key, a same-bucket different-density query
             # would count as a cache hit while jit silently retraces
-            key = key + extend.csr_shape_bucket(query.plan)
+            shape_key = shape_key + extend.csr_shape_bucket(query.plan)
+        # the trailing fingerprint versions the entry to one index content:
+        # after an index update, same-shape queries get a fresh entry (no
+        # false hit on a retired version, and retired versions can be
+        # evicted by invalidate_index — see the incremental conformance
+        # suite).  The engine itself is content-agnostic (plan arrays are
+        # call arguments), so entries for different versions of one shape
+        # share a single XLA trace from the pool below — an update never
+        # re-traces, which is what keeps run_delta's per-version cost
+        # proportional to the delta (DESIGN.md §8).
+        key = shape_key + (query.index_fingerprint,)
         fn = self._cache_get(key)
         if fn is not None:
             return fn
-        self.compiles += 1
-        if kind == "single":
-            if self.mesh is not None:
-                fn = eng.make_sharded_engine_fn(
-                    cfg, self.mesh, n_t=query.plan.n_t,
-                    csr_only=eng.is_csr_only(query.plan),
-                )
+        with self._cache_lock:
+            fn = self._traces.get(shape_key)
+        if fn is None:
+            self.compiles += 1
+            if kind == "single":
+                if self.mesh is not None:
+                    fn = eng.make_sharded_engine_fn(
+                        cfg, self.mesh, n_t=query.plan.n_t,
+                        csr_only=eng.is_csr_only(query.plan),
+                    )
+                else:
+                    fn = jax.jit(functools.partial(eng._engine_loop, cfg))
             else:
-                fn = jax.jit(functools.partial(eng._engine_loop, cfg))
-        else:
-            fn = jax.jit(jax.vmap(functools.partial(eng._engine_loop, cfg)))
+                fn = jax.jit(jax.vmap(functools.partial(eng._engine_loop, cfg)))
+            with self._cache_lock:
+                self._traces[shape_key] = fn
         self._cache_put(key, fn)
         return fn
 
@@ -518,6 +824,7 @@ class Enumerator:
                     p_pad=snap_p_pad(patterns[i].n),
                     max_parents=DEFAULT_MAX_PARENTS,
                     domains=dres,
+                    csr_factory=idx.csr_planes,
                 )
                 out[i] = Query(
                     pattern=patterns[i],
@@ -525,6 +832,7 @@ class Enumerator:
                     variant=variant,
                     name=name_of(i, patterns[i]),
                     prepare_s=dom_s + (time.perf_counter() - t1),
+                    index=idx,
                 )
         assert all(q is not None for q in out)
         return out  # type: ignore[return-value]
@@ -622,10 +930,29 @@ class Enumerator:
         ``extend.CSR_AUTO_NT`` target nodes (the cache key carries both the
         cfg and ``n_t``, so the resolution is stable per entry)."""
         fn = self._engine_fn(cfg, "single", 1, query)
-        arrays = eng.plan_arrays_for(cfg, query.plan)
+        arrays = self._plan_arrays(cfg, query)
         state = eng.init_state(query.plan, cfg)
         final = jax.block_until_ready(fn(arrays, state))
         return eng.result_from_state(final, cfg)
+
+    def _plan_arrays(self, cfg: EngineConfig, query: Query,
+                     plan: Optional[SearchPlan] = None):
+        """:func:`~repro.core.extend.plan_arrays_for` with the adjacency
+        transfer cached per index fingerprint (``_adj_device``): the query
+        plan and its delta anchor plans all reference one version's bitmap
+        object, so only the first run of a version ships it to device."""
+        plan = plan or query.plan
+        fp = query.index_fingerprint
+        if not fp or eng.resolve_step_backend_for_plan(cfg, plan) == "csr":
+            return eng.plan_arrays_for(cfg, plan)
+        dev = self._adj_device.get(fp)
+        if dev is None or tuple(dev.shape) != tuple(plan.adj_bits.shape):
+            dev = jnp.asarray(plan.adj_bits, jnp.uint32)
+            self._adj_device[fp] = dev
+            self._adj_device.move_to_end(fp)
+            while len(self._adj_device) > 2:
+                self._adj_device.popitem(last=False)
+        return eng.plan_arrays_for(cfg, plan, adj_bits=dev)
 
     def _retry_overflowed(self, cfg: EngineConfig, query: Query) -> EngineResult:
         """``cfg``'s run of ``query`` overflowed (undercounted): warn and
@@ -650,6 +977,202 @@ class Enumerator:
             )
         return res
 
+    # -- execution: delta (DESIGN.md §8) -----------------------------------
+
+    def run_delta(
+        self,
+        query: Union[Query, Graph],
+        old_matches,
+        delta: GraphDelta,
+    ) -> DeltaMatchSet:
+        """Incrementally maintain ``old_matches`` across one index update.
+
+        ``query`` must be prepared against the delta's **new** index
+        version (after ``new_index, delta = index.update(...)``, call
+        ``enum.prepare(pattern, index=new_index)``); ``old_matches`` is the
+        prior result for the old version — a :class:`MatchSet` or a list of
+        node-indexed mappings.  Work is restricted to the delta:
+
+        * removals invalidate prior matches by membership test (no
+          enumeration at all);
+        * insertions are enumerated by anchoring each distinct pattern
+          edge onto each compatible inserted target arc and running the
+          engine from those seeds only
+          (`repro.core.frontier.init_delta_state`), deduplicated by the
+          max-inserted-edge-index rule (`repro.core.delta`).
+
+        Returns a :class:`DeltaMatchSet`; ``result.apply(old_matches)`` is
+        bit-identical to a fresh enumeration's sorted mappings — the
+        standing gate in ``tests/test_incremental_conformance.py``.
+        """
+        query = self._coerce(query)
+        if delta.new_fingerprint and query.index_fingerprint != delta.new_fingerprint:
+            raise ValueError(
+                "run_delta: query is not prepared against the delta's new "
+                "index version (fingerprint mismatch) — after "
+                "SubgraphIndex.update(), prepare the query against the "
+                "returned index"
+            )
+        t0 = time.perf_counter()
+        removed: List[Tuple[int, ...]] = []
+        if delta.removed:
+            old_arr = delta_mod.as_mapping_array(old_matches)
+            n_old = len(old_arr)
+            removed = delta_mod.invalidated_mappings(
+                query.pattern, old_arr, delta.removed
+            )
+        else:
+            n_old = _match_count(old_matches)
+        added: List[Tuple[int, ...]] = []
+        states = seeds = anchors = retries = 0
+        if delta.added and query.plan.satisfiable:
+            for anchor, aplan in self._anchor_plans(query):
+                sd, sm, sc = delta_mod.build_anchor_seeds(aplan, anchor, delta.added)
+                if not sd.shape[0]:
+                    continue
+                anchors += 1
+                seeds += int(sd.shape[0])
+                rows, st, rt = self._run_seeded(query, aplan, sd, sm, sc)
+                states += st
+                retries += rt
+                added.extend(
+                    delta_mod.filter_new_matches(
+                        query.pattern,
+                        delta_mod.canonical_mappings(aplan, rows),
+                        delta.added,
+                        anchor,
+                    )
+                )
+        return DeltaMatchSet(
+            name=query.name,
+            added=sorted(added),
+            removed=sorted(removed),
+            n_old=n_old,
+            states=states,
+            n_seeds=seeds,
+            n_anchors=anchors,
+            preprocess_s=query.prepare_s,
+            match_s=time.perf_counter() - t0,
+            retries=retries,
+            delta=delta,
+        )
+
+    def _anchor_plans(self, query: Query) -> Iterator[Tuple[Tuple[int, int, int], SearchPlan]]:
+        """``(anchor, plan)`` per distinct pattern edge triple, cached on
+        the query.  Domains are ordering-independent, so one DomainResult
+        is computed once and shared by every anchor plan; anchor plans keep
+        the query's padding so same-shape anchors share compiled engines."""
+        if query.index is None:
+            raise ValueError(
+                "run_delta needs a query bound to a SubgraphIndex "
+                "(prepare it through an Enumerator / prepare_query)"
+            )
+        idx = query.index
+        flags = variant_flags(query.variant)
+        if query._anchor_domains is None:
+            # The query plan retains the node-indexed domain fixpoint it
+            # was assembled from; reuse it (AC/FC is by far the dominant
+            # host cost per version) and only recompute for plans built
+            # by older paths that did not stash it.
+            query._anchor_domains = query.plan.domains
+        if query._anchor_domains is None:
+            query._anchor_domains = dom_mod.compute_domains(
+                query.pattern,
+                idx.packed,
+                use_ac=flags["use_ac"],
+                use_fc=flags["use_fc"],
+                interleave=flags["interleave"],
+            )
+        for anchor in delta_mod.pattern_edge_triples(query.pattern):
+            aplan = query._anchors.get(anchor)
+            if aplan is None:
+                pa, pb, _ = anchor
+                aplan = build_plan(
+                    query.pattern,
+                    idx.packed,
+                    variant=query.variant,
+                    p_pad=query.plan.p_pad,
+                    max_parents=query.plan.max_parents,
+                    domains=query._anchor_domains,
+                    anchor=(pa,) if pa == pb else (pa, pb),
+                    csr_factory=idx.csr_planes,
+                )
+                query._anchors[anchor] = aplan
+            yield anchor, aplan
+
+    # first match-buffer size for seeded runs; grown (pow2) if any worker's
+    # per-run match count wraps its ring
+    _DELTA_MCAP = 256
+
+    def _run_seeded(
+        self,
+        query: Query,
+        aplan: SearchPlan,
+        sd: np.ndarray,
+        sm: np.ndarray,
+        sc: np.ndarray,
+    ) -> Tuple[np.ndarray, int, int]:
+        """Run the engine from delta seed entries, in worker-capacity
+        chunks; returns ``(match rows in aplan position space [K, n_p],
+        states, retries)``.  Seeded runs always collect matches (the delta
+        result is the mappings); a run whose per-worker match count wraps
+        the collect ring, or that overflows its stacks, is retried with a
+        doubled buffer / stack cap."""
+        cfg0 = self.config
+        aq = Query(
+            pattern=query.pattern, plan=aplan, variant=query.variant,
+            name=f"{query.name}~delta", prepare_s=0.0, index=query.index,
+        )
+        v = cfg0.n_workers
+        cap0 = cfg0.resolved_stack_cap(aplan.p_pad)
+        chunk = v * max(cap0 // 2, 1)
+        rows_out: List[np.ndarray] = []
+        states = retries = 0
+        for j in range(0, int(sd.shape[0]), chunk):
+            cs, cm, cc = sd[j:j + chunk], sm[j:j + chunk], sc[j:j + chunk]
+            # start from the largest buffer any prior seeded run needed:
+            # growth is sticky on the enumerator so a steady-state edit
+            # stream settles on one traced shape instead of paying a
+            # grow-retry (and an XLA compile) per call
+            mcap = max(self._DELTA_MCAP, self._delta_mcap)
+            cap = cap0
+            while True:
+                cfg = dataclasses.replace(
+                    cfg0, collect_matches=mcap, stack_cap=cap
+                )
+                fn = self._engine_fn(cfg, "single", 1, aq)
+                arrays = self._plan_arrays(cfg, aq, aplan)
+                state = frontier.init_delta_state(aplan, cfg, cs, cm, cc)
+                final = jax.block_until_ready(fn(arrays, state))
+                res = eng.result_from_state(final, cfg)
+                if res.overflow:
+                    if cap >= cap0 * 4:
+                        raise RuntimeError(
+                            f"delta run for {query.name!r} still overflows "
+                            f"at stack_cap={cap} — set an explicit "
+                            "EngineConfig.stack_cap budget"
+                        )
+                    cap *= 2
+                    retries += 1
+                    continue
+                pw = res.per_worker_matches
+                top = int(np.max(pw)) if pw is not None and pw.size else res.matches
+                if top > mcap:
+                    mcap = 1 << (top - 1).bit_length()
+                    self._delta_mcap = max(self._delta_mcap, mcap)
+                    retries += 1
+                    continue
+                break
+            states += res.states
+            if res.match_buf is not None and res.matches:
+                buf = np.asarray(res.match_buf)
+                rows = buf.reshape(-1, buf.shape[-1])
+                valid = (rows[:, : aplan.n_p] >= 0).all(axis=1)
+                rows_out.append(rows[valid][:, : aplan.n_p])
+        if rows_out:
+            return np.concatenate(rows_out, axis=0), states, retries
+        return np.zeros((0, aplan.n_p), dtype=np.int32), states, retries
+
     # -- execution: batch / stream ----------------------------------------
 
     def coalesce_key(self, query: Query, cfg: Optional[EngineConfig] = None) -> tuple:
@@ -661,13 +1184,17 @@ class Enumerator:
         load rides the compile cache at one compilation per key.
 
         The key is the shape bucket ``(p_pad, max_parents, n_t, w,
-        n_elab)``; under the csr backend it also carries the plan's padded
-        ``(deg_cap, nnz)`` — two same-bucket targets of different density
-        have differently shaped :class:`~repro.core.extend.CsrPlanArrays`
-        and cannot share a pack lane.
+        n_elab)`` plus the query's index fingerprint — queries against
+        different *contents* (two targets, or two versions of one updated
+        index) never share a pack, since their plan arrays differ
+        (DESIGN.md §8).  Under the csr backend it also carries the plan's
+        padded ``(deg_cap, nnz)`` — two same-bucket targets of different
+        density have differently shaped
+        :class:`~repro.core.extend.CsrPlanArrays` and cannot share a pack
+        lane.
         """
         cfg = cfg or self.config
-        key = query.bucket
+        key = query.bucket + (query.index_fingerprint,)
         if eng.resolve_step_backend_for_plan(cfg, query.plan) == "csr":
             key = key + extend.csr_shape_bucket(query.plan)
         return key

@@ -61,6 +61,8 @@ COUNTERS = (
     "rejected_backpressure",  # global queue full past the submit timeout
     "unsat",                # unsatisfiable queries answered without the engine
     "retries",              # overflow retries spent across completed queries
+    "index_updates",        # update_index() calls (no-op edits included)
+    "cache_invalidated",    # compile-cache entries evicted on index swap
     "dispatches",           # engine pack invocations
     "chunks",               # ResultChunks streamed
 )

@@ -226,6 +226,36 @@ class EnumerationService:
             in_flight=self._in_flight,
         )
 
+    def update_index(self, add_edges=(), remove_edges=()):
+        """Apply an edge-edit set to the live target (DESIGN.md §8).
+
+        Builds the next index version via :meth:`SubgraphIndex.update`
+        (incremental bitmap / CSR-plane patching, untouched planes shared),
+        swaps it in for queries prepared from now on, and evicts
+        compile-cache entries keyed to the retired fingerprint.  Returns
+        the :class:`~repro.core.delta.GraphDelta`.
+
+        Safe to call from any client thread while the dispatcher runs:
+        queries already prepared keep their own version (coalesce keys and
+        engine-cache keys carry the index fingerprint, so versions never
+        share a pack or produce a false cache hit), and the swap itself is
+        a single attribute assignment.
+        """
+        old = self.enumerator.index
+        if old is None:
+            raise ValueError("update_index: service has no index")
+        new_index, delta = old.update(
+            add_edges=add_edges, remove_edges=remove_edges
+        )
+        self.metrics.inc("index_updates")
+        if delta.is_empty:
+            return delta  # no-op edit: same index object, nothing to swap
+        self.enumerator.index = new_index
+        dropped = self.enumerator.invalidate_index(delta.old_fingerprint)
+        if dropped:
+            self.metrics.inc("cache_invalidated", dropped)
+        return delta
+
     # -- dispatcher --------------------------------------------------------
 
     def _bucket_key(self, req: Request) -> tuple:
