@@ -1,16 +1,25 @@
 """§Dry-run summary: per-cell memory feasibility table from the compiled
-``memory_analysis()`` records.
+``memory_analysis()`` records, plus the out-of-core partition plan.
 
   PYTHONPATH=src python -m benchmarks.dryrun_report
+  PYTHONPATH=src python -m benchmarks.dryrun_report --partition-nodes 33000 \
+      --mem-budget 300000
 
 Writes artifacts/dryrun_summary_<mesh>.md: argument/temp/output bytes per
 device, the 16 GB v5e HBM feasibility verdict, and compile times — the
 "proves it fits" artifact the brief requires, reported honestly (kimi/grok
 training exceed 256-chip residency; the dry run validates their sharding).
+
+Also writes artifacts/partition_plan.md: the partitioned backend's target
+partition plan (DESIGN.md §9) at a few partition counts — per-partition
+node/nnz/resident-byte rows plus cut-edge counts, and the partition count a
+``--mem-budget`` would derive — so out-of-core memory budgets can be sized
+without running the engine.
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 
 from benchmarks import roofline
@@ -46,7 +55,75 @@ def table(mesh: str) -> str:
     return hdr + "\n" + "\n".join(rows)
 
 
+def partition_plan_report(
+    n_nodes: int,
+    avg_deg: float = 6.0,
+    pattern_edges: int = 8,
+    n_parts_list=(1, 2, 4, 8),
+    mem_budget: int = 0,
+    seed: int = 7,
+) -> str:
+    """Markdown partition-plan section for a power-law target at ``n_nodes``
+    (DESIGN.md §9): per-partition nodes / raw nnz / resident plane bytes and
+    out-going cut arcs at each count in ``n_parts_list``, plus the padded
+    per-compile resident footprint the memory budget actually bounds.  With
+    ``mem_budget > 0`` also reports the count ``plan_partitions_budget``
+    derives — the number ``Enumerator(memory_budget_bytes=…)`` would run."""
+    from repro.core import extend, plan as plan_mod
+    from repro.data import graphgen
+
+    target = graphgen.power_law_graph(n_nodes, avg_deg=avg_deg, seed=seed)
+    pattern = graphgen.extract_pattern(target, pattern_edges, seed=seed)
+    plan = plan_mod.build_csr_plan(pattern, target)
+    whole = extend.part_resident_nbytes(extend.plan_partitions(plan, 1))
+
+    out = [
+        f"# Partition plan — power-law target, {target.n} nodes, "
+        f"{target.m} edges, pattern {pattern.n} nodes\n",
+        f"whole-target resident CSR planes (padded): {whole} bytes\n",
+    ]
+    for n_parts in n_parts_list:
+        pp = extend.plan_partitions(plan, n_parts)
+        padded = extend.part_resident_nbytes(pp)
+        out.append(
+            f"\n## n_parts={pp.n_parts} — resident budget {padded} bytes/partition "
+            f"(padded, {whole / max(padded, 1):.1f}x under whole target), "
+            f"{pp.cut_edges} cut arcs total\n"
+        )
+        out.append("| part | nodes | nnz | resident bytes (raw) | cut arcs out |")
+        out.append("|---|---|---|---|---|")
+        for pid in range(pp.n_parts):
+            lo, hi = int(pp.node_start[pid]), int(pp.node_start[pid + 1])
+            out.append(
+                f"| {pid} | {hi - lo} | {pp.parts[pid].nnz} "
+                f"| {pp.resident_nbytes(pid)} | {int(pp.cut_per_part[pid])} |"
+            )
+    if mem_budget > 0:
+        pp = extend.plan_partitions_budget(plan, mem_budget)
+        out.append(
+            f"\n## --mem-budget {mem_budget} derives n_parts={pp.n_parts} "
+            f"({extend.part_resident_nbytes(pp)} padded resident bytes/partition)\n"
+        )
+    out.append(
+        "\nresident bytes (raw) = one partition's plane arrays as stored; "
+        "the padded per-partition figure is what the engine holds on device "
+        "(all partitions share one compiled shape, so each pads to the "
+        "largest).  cut arcs leave the partition and are *not* replicated — "
+        "extensions that need them ride the spill frontier (DESIGN.md §9).\n"
+    )
+    return "\n".join(out)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--partition-nodes", type=int, default=4096,
+                    help="power-law target size for the partition-plan "
+                    "section (0 disables the section)")
+    ap.add_argument("--mem-budget", type=int, default=0, metavar="BYTES",
+                    help="also report the partition count this device-memory "
+                    "budget would derive")
+    args = ap.parse_args()
+
     for mesh in ("single", "multi"):
         cells = roofline.load_cells(mesh)
         if not cells:
@@ -66,6 +143,14 @@ def main() -> None:
                     "ZeRO-sharded), grok ≥512.  The compile itself is the "
                     "deliverable: the sharding is coherent at 256/512 "
                     "chips.\n")
+        print(f"[dryrun_report] wrote {path}")
+
+    if args.partition_nodes > 0:
+        os.makedirs(ART, exist_ok=True)
+        path = os.path.join(ART, "partition_plan.md")
+        with open(path, "w") as f:
+            f.write(partition_plan_report(
+                args.partition_nodes, mem_budget=args.mem_budget))
         print(f"[dryrun_report] wrote {path}")
 
 

@@ -41,16 +41,18 @@ from repro.core.plan import SearchPlan
 # Re-exports: the state/plan layers moved out in the §6 split but remain
 # importable from the engine (configs/sge.py, session, tests, dryrun).
 from repro.core.extend import (  # noqa: F401
-    CSR_PLAN_LOGICAL, CsrPlanArrays, PLAN_LOGICAL, PlanArrays,
+    CSR_PLAN_LOGICAL, CsrPlanArrays, PLAN_LOGICAL, PartPlanArrays, PlanArrays,
     abstract_csr_plan_arrays, abstract_plan_arrays, is_csr_only,
-    make_csr_plan_arrays, make_plan_arrays, plan_arrays_for,
-    plan_partition_specs, plan_partition_specs_for, resolve_step_backend,
-    resolve_step_backend_for_plan,
+    make_csr_plan_arrays, make_part_plan_arrays, make_plan_arrays,
+    part_plan_partition_specs, part_resident_nbytes, plan_arrays_for,
+    plan_partition_specs, plan_partition_specs_for, plan_partitions,
+    resolve_step_backend, resolve_step_backend_for_plan,
 )
 from repro.core.frontier import (  # noqa: F401
-    STATE_LOGICAL, EngineState, abstract_engine_state, init_state,
-    state_partition_specs,
+    STATE_LOGICAL, EngineState, SpillState, abstract_engine_state, init_state,
+    spill_partition_specs, state_partition_specs,
 )
+from repro.core.graph import bitmap_from_indices
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +89,12 @@ class EngineConfig:
       store_used: keep per-entry used-bitmaps on the stack (True) or
         recompute them from the mapping at expansion time (False; refuted
         as a default by §Perf iteration 7 — see EXPERIMENTS.md §Perf).
+      n_partitions: with ``step_backend="partitioned"``, how many
+        contiguous row partitions the target streams through (0 → 1).  The
+        session derives it from ``memory_budget_bytes``
+        (`repro.core.session.Enumerator`).
+      spill_cap: per-worker spill-ring capacity under the partitioned
+        backend; 0 = auto (see :meth:`resolved_spill_cap`).
     """
 
     n_workers: int = 1
@@ -102,18 +110,33 @@ class EngineConfig:
     step_backend: str = "jnp"
     use_pallas: bool = False
     store_used: bool = True
+    n_partitions: int = 0
+    spill_cap: int = 0
 
     def __post_init__(self):
-        if self.step_backend not in extend.STEP_BACKENDS + ("auto",):
+        # "partitioned" is deliberately NOT in STEP_BACKENDS: it is not a
+        # drop-in StepBackend (it needs the outer scheduling loop of
+        # run_partitioned), so the generic backend-matrix tests don't
+        # parametrize over it — it has its own conformance cases.
+        valid = extend.STEP_BACKENDS + ("auto", "partitioned")
+        if self.step_backend not in valid:
             raise ValueError(
-                f"step_backend={self.step_backend!r}; expected one of "
-                f"{extend.STEP_BACKENDS + ('auto',)}"
+                f"step_backend={self.step_backend!r}; expected one of {valid}"
             )
 
     def resolved_stack_cap(self, p_pad: int) -> int:
         if self.stack_cap:
             return self.stack_cap
         return self.expand_width * (p_pad + 2) + self.steal_chunk + 8
+
+    def resolved_spill_cap(self, p_pad: int) -> int:
+        """Spill-ring capacity: at least 2× the per-round push bound (the
+        drain watermark margin, :func:`part_spill_margin`) so the inner
+        loop always yields to the host before the ring can overflow."""
+        if self.spill_cap:
+            return self.spill_cap
+        return max(4 * self.resolved_stack_cap(p_pad),
+                   2 * self.rebalance_interval * self.expand_width)
 
 
 class EngineResult(NamedTuple):
@@ -472,7 +495,12 @@ def run(plan: SearchPlan, cfg: EngineConfig, mesh: Optional[Mesh] = None) -> Eng
     worker axis shards over its ``data`` axis (:func:`run_sharded`).
     The plan arrays match the resolved step backend (dense bitmaps, or
     CSR planes for ``step_backend="csr"`` / large-``n_t`` ``"auto"``).
+    ``step_backend="partitioned"`` routes to the out-of-core scheduling
+    loop (:func:`run_partitioned`), which streams target partitions
+    through device memory.
     """
+    if cfg.step_backend == "partitioned":
+        return run_partitioned(plan, cfg, mesh=mesh)
     if mesh is not None:
         return run_sharded(plan, cfg, mesh)
     arrays = plan_arrays_for(cfg, plan)
@@ -503,4 +531,431 @@ def result_from_state(final: EngineState, cfg: EngineConfig) -> EngineResult:
         overflow=bool(final.overflow),
         match_buf=np.asarray(final.match_buf) if cfg.collect_matches else None,
         per_worker_steals=np.asarray(final.steals),
+    )
+
+
+# ---------------------------------------------------------------------------
+# out-of-core partitioned execution (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# The target's adjacency planes are row-partitioned (PartitionedPlanes); at
+# any moment exactly ONE partition's planes are device-resident.  Children
+# whose parent rows are all resident are fully constrained and go to the
+# live stacks; children owing intersections to non-resident rows are
+# *partially* constrained and parked in per-worker spill rings with a
+# pending-parent bitmask.  The host drains rings into per-partition pools,
+# enumerates the resident partition to quiescence, swaps in the partition
+# with the deepest pool (round-robin under a mesh), finishes constraining
+# its pooled entries at intake (dead / live seed / re-spill toward the next
+# pending parent), and repeats until every pool is empty.  Only fully
+# constrained entries are ever extracted, so the match set is bit-identical
+# to the monolithic run — partitioning changes scheduling, never results.
+
+def part_spill_margin(cfg: EngineConfig) -> int:
+    """Max spill pushes per worker per round — the drain watermark: the
+    inner loop yields to the host while at least this much ring headroom
+    remains, so a round in flight can never overflow the ring."""
+    return cfg.rebalance_interval * cfg.expand_width
+
+
+def make_part_round_fn(cfg: EngineConfig, plan: extend.PartPlanArrays):
+    """One partitioned engine round over ``(EngineState, SpillState)``:
+    ``rebalance_interval`` partitioned steps, a ring compaction (the CSR
+    layout hook), and a live-stack steal round (spill rings are worker-local
+    and never stolen from — they hold parked, not runnable, work)."""
+    step = extend.make_partitioned_step_fn(cfg, plan)
+
+    def body(carry):
+        st, spill = carry
+        st, spill = lax.fori_loop(
+            0, cfg.rebalance_interval, lambda _, c: step(*c), (st, spill)
+        )
+        sd, sm, su, sc, base, size = frontier.compact(
+            st.st_depth, st.st_map, st.st_used, st.st_cand, st.base, st.size,
+        )
+        st = st._replace(
+            st_depth=sd, st_map=sm, st_used=su, st_cand=sc, base=base, size=size,
+        )
+        if cfg.work_stealing and cfg.n_workers > 1:
+            st = _steal_round(cfg, st)
+        return st._replace(steps=st.steps + cfg.rebalance_interval), spill
+
+    return body
+
+
+def _part_engine_loop(
+    cfg: EngineConfig, plan: extend.PartPlanArrays,
+    st: EngineState, spill: SpillState,
+):
+    """Single-device partitioned inner loop: run rounds until the live
+    stacks drain, a stack overflows, or a spill ring crosses its drain
+    watermark (yield to the host, which drains the rings and re-enters
+    with the same live state)."""
+    max_steps = cfg.max_steps or (1 << 30)
+    body = make_part_round_fn(cfg, plan)
+    margin = part_spill_margin(cfg)
+
+    def cond(carry):
+        s, sp = carry
+        return (
+            (jnp.sum(s.size) > 0) & (s.steps < max_steps)
+            & ~s.overflow & ~sp.sp_overflow
+            & ~frontier.spill_watermark(sp, margin)
+        )
+
+    return lax.while_loop(cond, body, (st, spill))
+
+
+def _part_sharded_device_loop(
+    cfg: EngineConfig, axis: str, plan: extend.PartPlanArrays,
+    st: EngineState, spill: SpillState,
+):
+    """Mesh form of :func:`_part_engine_loop`: the resident partition is
+    replicated on every device, worker stacks and spill rings shard over
+    ``axis``.  Termination (drain / overflow / watermark) is psum'd so all
+    devices exit the same iteration and the host drains globally."""
+    max_steps = cfg.max_steps or (1 << 30)
+    body0 = make_part_round_fn(cfg, plan)
+    margin = part_spill_margin(cfg)
+
+    def gsize(s):
+        return lax.psum(jnp.sum(s.size), axis)
+
+    def gstop(s, sp):
+        local = (
+            s.overflow.astype(jnp.int32)
+            + sp.sp_overflow.astype(jnp.int32)
+            + frontier.spill_watermark(sp, margin).astype(jnp.int32)
+        )
+        return lax.psum(local, axis) > 0
+
+    def body(carry):
+        s, sp, _, _ = carry
+        s, sp = body0((s, sp))
+        return s, sp, gsize(s), gstop(s, sp)
+
+    def cond(carry):
+        s, sp, gs, stop = carry
+        return (gs > 0) & (s.steps < max_steps) & ~stop
+
+    st, spill, _, _ = lax.while_loop(
+        cond, body, (st, spill, gsize(st), gstop(st, spill))
+    )
+    # overflow flags are device-local until here; replicate for P() out-specs
+    ovf = lax.psum(st.overflow.astype(jnp.int32), axis) > 0
+    spovf = lax.psum(spill.sp_overflow.astype(jnp.int32), axis) > 0
+    return st._replace(overflow=ovf), spill._replace(sp_overflow=spovf)
+
+
+def make_partitioned_engine_fn(
+    cfg: EngineConfig, mesh: Optional[Mesh] = None, axis: Optional[str] = None
+):
+    """Jitted ``(PartPlanArrays, EngineState, SpillState) → (EngineState,
+    SpillState)`` — the per-leg inner engine :func:`run_partitioned` drives.
+    One compile serves every partition of a target: all partitions pad to
+    common shapes and the resident row range rides in traced scalars."""
+    if mesh is None:
+        return jax.jit(functools.partial(_part_engine_loop, cfg))
+    axis = axis or mesh_worker_axis(mesh)
+    n_dev = int(mesh.shape[axis])
+    if cfg.n_workers % n_dev:
+        raise ValueError(
+            f"n_workers={cfg.n_workers} not divisible by mesh axis "
+            f"{axis!r} size {n_dev}; round up to a multiple"
+        )
+    st_specs = state_partition_specs(axis)
+    sp_specs = spill_partition_specs(axis)
+    fn = shard_map(
+        functools.partial(_part_sharded_device_loop, cfg, axis),
+        mesh=mesh,
+        in_specs=(extend.part_plan_partition_specs(), st_specs, sp_specs),
+        out_specs=(st_specs, sp_specs),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _part_fn_cached(cfg: EngineConfig, mesh: Optional[Mesh]):
+    return make_partitioned_engine_fn(cfg, mesh)
+
+
+def _intake_entry(plan: SearchPlan, pp, pid: int, depth: int,
+                  map_row: np.ndarray, cand: np.ndarray, pending: int):
+    """Apply the now-resident pending parents of one pooled entry: AND the
+    partition's adjacency rows into ``cand`` and clear their pending bits.
+    Returns the updated ``(cand, pending)``."""
+    lo, hi = int(pp.node_start[pid]), int(pp.node_start[pid + 1])
+    part = pp.parts[pid]
+    j = 0
+    rem = pending
+    while rem:
+        if rem & 1:
+            ppos = int(plan.parent_pos[depth, j])
+            t = int(map_row[ppos])
+            if lo <= t < hi:
+                plane = int(plan.parent_elab[depth, j]) * 2 + int(
+                    plan.parent_dir[depth, j]
+                )
+                s = int(part.indptr[plane, t - lo])
+                e = int(part.indptr[plane, t - lo + 1])
+                row = bitmap_from_indices(
+                    part.indices[s:e].astype(np.int64), plan.n_t, plan.w
+                )
+                cand = cand & row
+                pending &= ~(1 << j)
+        rem >>= 1
+        j += 1
+    return cand, pending
+
+
+def _intake_chunk(plan: SearchPlan, pp, pid: int, pools, chunk_n: int):
+    """Pop up to ``chunk_n`` entries from partition ``pid``'s pool and
+    finish/advance their constraints: dead entries are dropped, still-
+    pending entries are re-routed to the partition of their (new) first
+    pending parent, fully constrained entries become live seeds.  Returns
+    ``(seed_depth, seed_map, seed_cand, n_dead)`` — possibly zero seeds.
+    """
+    pool = pools[pid]
+    sd, sm, sc = [], [], []
+    n_dead = 0
+    while pool and len(sd) < chunk_n:
+        depth, map_row, cand, pending = pool.pop()
+        cand, pending = _intake_entry(plan, pp, pid, depth, map_row, cand, pending)
+        if not cand.any():
+            n_dead += 1
+            continue
+        if pending:
+            j0 = (pending & -pending).bit_length() - 1
+            t = int(map_row[int(plan.parent_pos[depth, j0])])
+            tgt = int(np.searchsorted(pp.node_start, t, side="right") - 1)
+            pools[tgt].append((depth, map_row, cand, pending))
+            continue
+        sd.append(depth)
+        sm.append(map_row)
+        sc.append(cand)
+    return (
+        np.asarray(sd, dtype=np.int32),
+        np.asarray(sm, dtype=np.int32).reshape(len(sm), plan.p_pad),
+        np.asarray(sc, dtype=np.uint32).reshape(len(sc), plan.w),
+        n_dead,
+    )
+
+
+def _drain_spill(spill: SpillState):
+    """Pull every worker's spill-ring entries to host tuples
+    ``(depth, map, cand, pending, part)`` (the rings' write cursor resets
+    device-side; slots past ``sp_size`` are stale and never read)."""
+    d_, m_, c_, pe_, pa_, sz_ = jax.device_get((
+        spill.sp_depth, spill.sp_map, spill.sp_cand,
+        spill.sp_pending, spill.sp_part, spill.sp_size,
+    ))
+    out = []
+    for v in range(sz_.shape[0]):
+        for i in range(int(sz_[v])):
+            out.append((
+                int(d_[v, i]), m_[v, i].copy(), c_[v, i].copy(),
+                int(pe_[v, i]), int(pa_[v, i]),
+            ))
+    return out
+
+
+_PART_MAX_ATTEMPTS = 4
+
+
+def run_partitioned(
+    plan: SearchPlan,
+    cfg: EngineConfig,
+    mesh: Optional[Mesh] = None,
+    engine_factory=None,
+    stats: Optional[dict] = None,
+) -> EngineResult:
+    """Enumerate ``plan`` against a row-partitioned target streamed through
+    device memory — the outer scheduling loop of the out-of-core path
+    (DESIGN.md §9).
+
+    ``cfg.n_partitions`` partitions (0 → 1; with 1 no extension can ever
+    leave the resident range, degenerating to the CSR backend's behavior)
+    are visited: the resident one is enumerated to quiescence in *legs*
+    (seed → inner-loop to drain, with host ring-drains at the spill
+    watermark), then the partition with the deepest spill pool is swapped
+    in (round-robin under a mesh) and re-seeded from its pooled entries.
+    Stack or spill-ring overflow retries the leg with the affected capacity
+    doubled (the PR-4 watermark semantics, leg-scoped).
+
+    ``engine_factory(cfg) → fn`` overrides the inner-engine builder (the
+    session routes it through its compile cache); ``stats`` — if given — is
+    filled with partition/scheduling counters (resident bytes, visits,
+    legs, spills, deaths).
+    """
+    if cfg.step_backend != "partitioned":
+        cfg = dataclasses.replace(cfg, step_backend="partitioned")
+    n_parts = max(1, cfg.n_partitions)
+    pp = extend.plan_partitions(plan, n_parts)
+    p_pad, w, v = plan.p_pad, plan.w, cfg.n_workers
+    mcap = max(1, cfg.collect_matches)
+    if engine_factory is None:
+        engine_factory = lambda c: _part_fn_cached(c, mesh)  # noqa: E731
+
+    pools = [[] for _ in range(n_parts)]
+    leg_cfg = cfg
+    totals = dict(matches=0, states=0, steps=0, steals=0, steal_rounds=0,
+                  steal_depth=0, exp_depth=0)
+    pw_states = np.zeros(v, dtype=np.int64)
+    pw_matches = np.zeros(v, dtype=np.int64)
+    pw_steals = np.zeros(v, dtype=np.int64)
+    match_rows = []
+    n_visits = n_legs = n_rounds = n_spilled = n_dead = 0
+    max_pool = 0
+
+    def run_leg(arrays, seed):
+        """One leg: seed → inner loop to quiescence (draining rings at the
+        watermark); retries with doubled caps on overflow.  Returns the
+        final state and this leg's staged spill entries."""
+        nonlocal leg_cfg, n_rounds
+        for _ in range(_PART_MAX_ATTEMPTS):
+            fn = engine_factory(leg_cfg)
+            if seed is None:
+                st = frontier.init_state(plan, leg_cfg)
+            else:
+                st = frontier.init_delta_state(plan, leg_cfg, *seed)
+            spill = frontier.init_spill_state(
+                v, leg_cfg.resolved_spill_cap(p_pad), p_pad, w
+            )
+            staged = []
+            retry = False
+            while True:
+                st, spill = jax.block_until_ready(fn(arrays, st, spill))
+                n_rounds += 1
+                if bool(st.overflow):
+                    leg_cfg = dataclasses.replace(
+                        leg_cfg, stack_cap=2 * leg_cfg.resolved_stack_cap(p_pad)
+                    )
+                    retry = True
+                    break
+                if bool(spill.sp_overflow):
+                    leg_cfg = dataclasses.replace(
+                        leg_cfg, spill_cap=2 * leg_cfg.resolved_spill_cap(p_pad)
+                    )
+                    retry = True
+                    break
+                staged.extend(_drain_spill(spill))
+                spill = spill._replace(
+                    sp_size=jnp.zeros_like(spill.sp_size),
+                    sp_overflow=jnp.zeros_like(spill.sp_overflow),
+                )
+                max_steps = leg_cfg.max_steps or (1 << 30)
+                if int(jnp.sum(st.size)) == 0 or int(st.steps) >= max_steps:
+                    return st, staged
+            if not retry:  # pragma: no cover — loop exits via return/break
+                break
+        raise RuntimeError(
+            f"partitioned leg kept overflowing after {_PART_MAX_ATTEMPTS} "
+            f"capacity doublings (stack_cap={leg_cfg.stack_cap}, "
+            f"spill_cap={leg_cfg.spill_cap})"
+        )
+
+    def absorb(st, staged):
+        """Fold a completed leg into the run totals and commit its spills."""
+        nonlocal n_spilled, max_pool, pw_states, pw_matches, pw_steals
+        totals["matches"] += int(jnp.sum(st.matches))
+        totals["states"] += int(jnp.sum(st.states))
+        totals["steps"] += int(st.steps)
+        totals["steals"] += int(jnp.sum(st.steals))
+        totals["steal_rounds"] += int(st.steal_rounds)
+        totals["steal_depth"] += int(jnp.sum(st.steal_depth))
+        totals["exp_depth"] += int(jnp.sum(st.exp_depth))
+        pw_states += np.asarray(st.states, dtype=np.int64)
+        pw_matches += np.asarray(st.matches, dtype=np.int64)
+        pw_steals += np.asarray(st.steals, dtype=np.int64)
+        if cfg.collect_matches:
+            m = np.asarray(st.matches)
+            buf = np.asarray(st.match_buf)
+            for v_ in range(v):
+                k = min(int(m[v_]), mcap)
+                if k:
+                    match_rows.append(buf[v_, :k])
+        for depth, map_row, cand, pending, part in staged:
+            pools[part].append((depth, map_row, cand, pending))
+        n_spilled += len(staged)
+        max_pool = max(max_pool, max((len(p) for p in pools), default=0))
+
+    current = 0
+    roots_done = False
+    while True:
+        arrays = extend.make_part_plan_arrays(plan, pp, current)
+        n_visits += 1
+        while True:
+            if not roots_done:
+                seed = None  # first leg: the usual depth-0 root split
+            else:
+                chunk_n = v * max(leg_cfg.resolved_stack_cap(p_pad) // 2, 1)
+                sd, sm, sc, dead = _intake_chunk(plan, pp, current, pools, chunk_n)
+                n_dead += dead
+                if sd.shape[0] == 0:
+                    if pools[current]:
+                        continue  # chunk was all dead/re-routed; keep draining
+                    break  # partition quiescent
+                seed = (sd, sm, sc)
+            st, staged = run_leg(arrays, seed)
+            absorb(st, staged)
+            n_legs += 1
+            roots_done = True
+        nxt = None
+        if mesh is not None:  # round-robin partition rotation under a mesh
+            for off in range(1, n_parts + 1):
+                cand_p = (current + off) % n_parts
+                if pools[cand_p]:
+                    nxt = cand_p
+                    break
+        else:  # deepest spill pool first
+            depth_best = 0
+            for pid in range(n_parts):
+                if len(pools[pid]) > depth_best:
+                    nxt, depth_best = pid, len(pools[pid])
+        if nxt is None:
+            break
+        current = nxt
+
+    if stats is not None:
+        stats.update(
+            n_parts=n_parts,
+            visits=n_visits,
+            legs=n_legs,
+            rounds=n_rounds,
+            spilled=n_spilled,
+            dead_spills=n_dead,
+            max_pool=max_pool,
+            cut_edges=pp.cut_edges,
+            resident_plane_bytes=extend.part_resident_nbytes(pp),
+            per_part_nbytes=[p.nbytes for p in pp.parts],
+            final_stack_cap=leg_cfg.resolved_stack_cap(p_pad),
+            final_spill_cap=leg_cfg.resolved_spill_cap(p_pad),
+        )
+
+    match_buf = None
+    if cfg.collect_matches:
+        rows = (
+            np.concatenate(match_rows, axis=0)
+            if match_rows else np.zeros((0, p_pad), np.int32)
+        )
+        match_buf = np.full((1, max(1, rows.shape[0]), p_pad), -1, np.int32)
+        if rows.shape[0]:
+            match_buf[0, : rows.shape[0]] = rows
+
+    steals = totals["steals"]
+    states = totals["states"]
+    return EngineResult(
+        matches=totals["matches"],
+        states=states,
+        steps=totals["steps"],
+        steals=steals,
+        steal_rounds=totals["steal_rounds"],
+        mean_steal_depth=(totals["steal_depth"] / steals) if steals else 0.0,
+        mean_expand_depth=(totals["exp_depth"] / states) if states else 0.0,
+        per_worker_states=pw_states,
+        per_worker_matches=pw_matches,
+        overflow=False,
+        match_buf=match_buf,
+        per_worker_steals=pw_steals,
     )

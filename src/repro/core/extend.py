@@ -55,12 +55,14 @@ from jax import lax
 from jax.sharding import PartitionSpec
 
 from repro.core import frontier
-from repro.core.frontier import EngineState
+from repro.core.frontier import EngineState, SpillState
 from repro.core.graph import (
     WORD_BITS,
     CsrPlanes,
+    PartitionedPlanes,
     bitmap_from_indices,
     csr_planes_from_bitmaps,
+    partition_csr_planes,
 )
 from repro.core.plan import SearchPlan
 
@@ -290,7 +292,168 @@ def csr_plan_partition_specs() -> CsrPlanArrays:
     )
 
 
-AnyPlanArrays = Union[PlanArrays, CsrPlanArrays]
+# ---------------------------------------------------------------------------
+# partitioned plan arrays (out-of-core targets, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+class PartPlanArrays(NamedTuple):
+    """Device-resident plan arrays for **one resident partition** of a
+    row-partitioned target (`repro.core.graph.PartitionedPlanes`).
+
+    Mirrors :class:`CsrPlanArrays` with the plane rows restricted to the
+    resident partition: ``indptr`` is over partition-**local** rows (global
+    row ``t`` ↦ ``t - part_lo``); ``indices`` keep **global** column ids.
+    Every partition of a target is padded to the *same* shapes
+    (``max_local`` rows, ``max_nnz`` entries), so one compiled engine serves
+    all partitions and swapping partitions is a pure data transfer —
+    ``part_lo`` / ``part_hi`` bound the resident global-row range and
+    ``part_starts`` routes spill entries to the partition owning their
+    first pending parent.
+    """
+
+    order_valid: jnp.ndarray  # [p_pad] bool
+    parent_pos: jnp.ndarray  # [p_pad, mp] int32
+    parent_dir: jnp.ndarray  # [p_pad, mp]
+    parent_elab: jnp.ndarray  # [p_pad, mp]
+    dom_bits: jnp.ndarray  # [p_pad, w] uint32
+    indptr: jnp.ndarray  # [n_planes, max_loc_pad + 1] int32, local rows
+    indices: jnp.ndarray  # [nnz_pad + deg_cap] int32, global columns
+    seg_iota: jnp.ndarray  # [deg_cap] int32
+    part_starts: jnp.ndarray  # [n_parts + 1] int32 global row boundaries
+    part_lo: jnp.ndarray  # [] int32 resident range start (global row)
+    part_hi: jnp.ndarray  # [] int32 resident range end (exclusive)
+    n_p: jnp.ndarray  # [] int32
+
+
+def _pad_rows(n: int) -> int:
+    """Local-row shape bucket (multiples of 64, min 64) so all partitions of
+    a target — and re-partitioned same-scale targets — share one compile."""
+    return max(64, ((n + 63) // 64) * 64)
+
+
+def plan_partitions(plan: SearchPlan, n_parts: int) -> PartitionedPlanes:
+    """The plan's target partitioning at ``n_parts``, computed once and
+    cached on the plan (partitioning is O(nnz) host work per count)."""
+    cache = getattr(plan, "_partitions", None)
+    if cache is None:
+        cache = {}
+        plan._partitions = cache
+    pp = cache.get(n_parts)
+    if pp is None:
+        pp = partition_csr_planes(_plan_csr(plan), n_parts=n_parts)
+        cache[n_parts] = pp
+    return pp
+
+
+def plan_partitions_budget(plan: SearchPlan, max_bytes: int) -> PartitionedPlanes:
+    """Partitioning at the smallest count whose **padded** resident plane
+    arrays (:func:`part_resident_nbytes` — what actually occupies the
+    device) fit ``max_bytes``; cached on the plan under both the budget and
+    the resulting count, so the engine's ``plan_partitions(plan,
+    pp.n_parts)`` returns the same object."""
+    cache = getattr(plan, "_partitions", None)
+    if cache is None:
+        cache = {}
+        plan._partitions = cache
+    key = ("budget", int(max_bytes))
+    pp = cache.get(key)
+    if pp is None:
+        cp = _plan_csr(plan)
+        pp = partition_csr_planes(cp, max_bytes=max_bytes)
+        while part_resident_nbytes(pp) > max_bytes and pp.n_parts < cp.n_t:
+            pp = partition_csr_planes(cp, n_parts=pp.n_parts + 1)
+        if part_resident_nbytes(pp) > max_bytes:
+            raise ValueError(
+                f"memory_budget_bytes={max_bytes} cannot hold even a "
+                f"single-row partition's padded planes "
+                f"({part_resident_nbytes(pp)} bytes at n_parts={pp.n_parts})"
+            )
+        cache[key] = pp
+        cache.setdefault(pp.n_parts, pp)
+    return pp
+
+
+def partitioned_shape_bucket(plan: SearchPlan, n_parts: int) -> Tuple[int, int, int, int]:
+    """``(n_parts, max_loc_pad, nnz_pad, deg_cap_pad)`` — the partition
+    identity the session folds into compile-cache and coalesce keys: two
+    queries share a compiled partitioned engine iff these (plus the usual
+    bucket) agree."""
+    pp = plan_partitions(plan, n_parts)
+    return (
+        pp.n_parts,
+        _pad_rows(pp.max_local),
+        _pad_nnz(pp.max_nnz),
+        _pad_deg_cap(pp.deg_cap),
+    )
+
+
+def part_resident_nbytes(pp: PartitionedPlanes) -> int:
+    """Device bytes of one resident partition's padded plane arrays
+    (``indptr`` + ``indices`` + ``part_starts``) — what the memory budget
+    bounds.  Slightly above ``PartitionedPlanes.max_resident_nbytes``
+    because of the shared-compile shape padding."""
+    max_loc_pad = _pad_rows(pp.max_local)
+    nnz_pad = _pad_nnz(pp.max_nnz)
+    deg_cap = _pad_deg_cap(pp.deg_cap)
+    return 4 * (pp.n_planes * (max_loc_pad + 1) + nnz_pad + deg_cap + pp.n_parts + 1)
+
+
+def make_part_plan_arrays(
+    plan: SearchPlan, pp: PartitionedPlanes, pid: int
+) -> PartPlanArrays:
+    """Device arrays for partition ``pid`` — all partitions pad to common
+    shapes (see :class:`PartPlanArrays`).  Padded local rows repeat the
+    plane's end offset (zero-length rows); padded ``indices`` entries are
+    :data:`CSR_SENTINEL`."""
+    part = pp.parts[pid]
+    max_loc_pad = _pad_rows(pp.max_local)
+    nnz_pad = _pad_nnz(pp.max_nnz)
+    deg_cap = _pad_deg_cap(pp.deg_cap)
+    n_loc = part.n_t
+    indptr = np.zeros((pp.n_planes, max_loc_pad + 1), dtype=np.int32)
+    indptr[:, : n_loc + 1] = part.indptr
+    indptr[:, n_loc + 1 :] = part.indptr[:, -1:]
+    indices = np.full(nnz_pad + deg_cap, CSR_SENTINEL, dtype=np.int32)
+    indices[: part.nnz] = part.indices
+    return PartPlanArrays(
+        order_valid=jnp.asarray(plan.order >= 0),
+        parent_pos=jnp.asarray(plan.parent_pos, jnp.int32),
+        parent_dir=jnp.asarray(plan.parent_dir, jnp.int32),
+        parent_elab=jnp.asarray(plan.parent_elab, jnp.int32),
+        dom_bits=jnp.asarray(plan.dom_bits, jnp.uint32),
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(indices),
+        seg_iota=jnp.arange(deg_cap, dtype=jnp.int32),
+        part_starts=jnp.asarray(pp.node_start, jnp.int32),
+        part_lo=jnp.asarray(int(pp.node_start[pid]), jnp.int32),
+        part_hi=jnp.asarray(int(pp.node_start[pid + 1]), jnp.int32),
+        n_p=jnp.asarray(plan.n_p, jnp.int32),
+    )
+
+
+def part_plan_partition_specs() -> PartPlanArrays:
+    """PartitionSpecs for :class:`PartPlanArrays`: fully replicated — under
+    a mesh the *same* resident partition is swapped onto every device and
+    workers shard over the ``data`` axis (partitions stream through time,
+    not across devices)."""
+    P = PartitionSpec
+    return PartPlanArrays(
+        order_valid=P(None),
+        parent_pos=P(None, None),
+        parent_dir=P(None, None),
+        parent_elab=P(None, None),
+        dom_bits=P(None, None),
+        indptr=P(None, None),
+        indices=P(None),
+        seg_iota=P(None),
+        part_starts=P(None),
+        part_lo=P(),
+        part_hi=P(),
+        n_p=P(),
+    )
+
+
+AnyPlanArrays = Union[PlanArrays, CsrPlanArrays, PartPlanArrays]
 
 
 def is_csr_only(plan: SearchPlan) -> bool:
@@ -315,7 +478,14 @@ def plan_arrays_for(cfg: "EngineConfig", plan: SearchPlan,
     per the resolved step backend.  ``adj_bits`` passes a pre-transferred
     device adjacency through to :func:`make_plan_arrays` (ignored by the
     CSR layout, which never ships the dense bitmaps)."""
-    if resolve_step_backend_for_plan(cfg, plan) == "csr":
+    resolved = resolve_step_backend_for_plan(cfg, plan)
+    if resolved == "partitioned":
+        raise ValueError(
+            "step_backend='partitioned' builds per-partition arrays inside "
+            "repro.core.engine.run_partitioned (one PartPlanArrays per swap), "
+            "not a single monolithic plan-array pytree"
+        )
+    if resolved == "csr":
         return make_csr_plan_arrays(plan)
     if is_csr_only(plan):
         raise ValueError(
@@ -677,10 +847,128 @@ class CsrStepBackend:
         )
 
 
+class PartStepLanes(NamedTuple):
+    """:class:`StepLanes` plus the spill routing a partitioned expansion
+    produces (DESIGN.md §9).  ``lanes.has_child`` is narrowed to *live*
+    children (fully constrained: every real parent resident and applied);
+    ``spill`` flags children with surviving partial candidates that still
+    owe intersections to non-resident parents."""
+
+    lanes: StepLanes
+    spill: jnp.ndarray  # [B] bool — child parked for a non-resident partition
+    pending: jnp.ndarray  # [B] int32 bitmask of unapplied parent slots
+    spill_part: jnp.ndarray  # [B] int32 partition of first pending parent (-1)
+
+
+class PartitionedCsrStepBackend(CsrStepBackend):
+    """Partition-aware CSR walk (DESIGN.md §9): candidates are intersected
+    with the rows of parents **resident** in the swapped-in partition; the
+    remaining parents are recorded in a per-child ``pending`` bitmask and
+    the child is flagged for the spill frontier instead of the live stack.
+
+    The walk itself is :class:`CsrStepBackend`'s, with non-resident parent
+    slots neutralized exactly like unused slots (segment length ``-1``):
+    the driver is the first *resident* parent and membership is tested only
+    against resident segments, so the partial candidate set is
+    ``dom ∧ ¬used ∧ ⋂ resident parents`` — an over-approximation that the
+    outer scheduling loop finishes constraining at intake, when the pending
+    parents' partitions become resident.  Because only fully-constrained
+    entries ever reach a live stack, every extraction — and therefore every
+    match — is exactly a monolithic extraction: the match set is
+    bit-identical to the unpartitioned run (the conformance suite gates
+    counts *and* sorted mappings per partition count).
+    """
+
+    name = "partitioned"
+
+    def __init__(self, cfg: "EngineConfig", plan: PartPlanArrays):
+        super().__init__(cfg, plan)
+        self.n_parts = plan.part_starts.shape[0] - 1
+
+    def _segments(self, pos: jnp.ndarray, map2: jnp.ndarray):
+        """Resident-masked segment bounds plus spill routing: ``(start,
+        length, pending, spill_part)`` — length ``-1`` on unused *and*
+        non-resident parent slots."""
+        plan = self.plan
+        mp = plan.parent_pos.shape[1]
+        safe_pos = jnp.clip(pos, 0, self.p_pad - 1)
+        pp = plan.parent_pos[safe_pos]  # [B, mp]
+        pd = plan.parent_dir[safe_pos]
+        pe = plan.parent_elab[safe_pos]
+        real = pp >= 0
+        t = jnp.take_along_axis(map2, jnp.maximum(pp, 0), axis=1)
+        t = jnp.where(real, t, 0)
+        resident = real & (t >= plan.part_lo) & (t < plan.part_hi)
+        t_loc = jnp.clip(t - plan.part_lo, 0, self.n_t - 1)
+        plane = jnp.clip(pe * 2 + pd, 0, self.n_planes - 1)
+        start = plan.indptr[plane, t_loc]
+        length = jnp.where(resident, plan.indptr[plane, t_loc + 1] - start, -1)
+
+        pend_mask = real & ~resident
+        pending = jnp.sum(
+            pend_mask.astype(jnp.int32) << jnp.arange(mp, dtype=jnp.int32)[None, :],
+            axis=1, dtype=jnp.int32,
+        )
+        first_j = jnp.argmax(pend_mask, axis=1)
+        t_first = jnp.take_along_axis(t, first_j[:, None], axis=1)[:, 0]
+        spill_part = jnp.searchsorted(plan.part_starts, t_first, side="right") - 1
+        spill_part = jnp.where(pending != 0, spill_part.astype(jnp.int32), -1)
+        return start, length, pending, spill_part
+
+    def expand_lanes_part(self, depth, map_, used, cand) -> PartStepLanes:
+        plan = self.plan
+        b = depth.shape[0]
+        valid_j, v_j, _ = jax.vmap(pop_lowest_bit)(cand)
+        map2 = jnp.where(
+            valid_j[:, None],
+            map_.at[jnp.arange(b), jnp.clip(depth, 0, self.p_pad - 1)].set(v_j),
+            map_,
+        )
+        used2 = jnp.where(
+            valid_j[:, None], used | jax.vmap(bit_row, (0, None))(v_j, self.w), used
+        )
+        child_pos = jnp.clip(depth + 1, 0, self.p_pad - 1)
+        start, length, pending, spill_part = self._segments(child_pos, map2)
+        cand2, child_cand, meta = self._step(
+            plan.indices, plan.dom_bits, start, length, child_pos,
+            depth, plan.n_p, used, cand,
+        )
+        survived = meta[:, 3] != 0  # want_child ∧ partial candidates non-empty
+        live = survived & (pending == 0)
+        spill = survived & (pending != 0)
+        lanes = StepLanes(
+            valid=meta[:, 0] != 0,
+            v=meta[:, 1],
+            is_match=meta[:, 2] != 0,
+            has_child=live,
+            cand2=cand2,
+            map2=map2,
+            used2=used2,
+            child_cand=child_cand,
+        )
+        return PartStepLanes(lanes=lanes, spill=spill, pending=pending,
+                             spill_part=spill_part)
+
+    def expand_lanes(self, depth, map_, used, cand) -> StepLanes:
+        return self.expand_lanes_part(depth, map_, used, cand).lanes
+
+
 def make_step_backend(cfg: "EngineConfig", plan: AnyPlanArrays) -> StepBackend:
     """Backend for ``cfg`` over ``plan`` — the array layout must match the
     resolved backend (``plan_arrays_for`` guarantees it; ``"auto"``
     resolves by layout here since the abstract path has no ``n_t``)."""
+    if isinstance(plan, PartPlanArrays):
+        if cfg.step_backend != "partitioned":
+            raise ValueError(
+                f"step_backend={cfg.step_backend!r} cannot run PartPlanArrays"
+            )
+        return PartitionedCsrStepBackend(cfg, plan)
+    if cfg.step_backend == "partitioned":
+        raise ValueError(
+            "step_backend='partitioned' needs PartPlanArrays "
+            "(build them with make_part_plan_arrays; run via "
+            "repro.core.engine.run_partitioned)"
+        )
     if isinstance(plan, CsrPlanArrays):
         if cfg.step_backend not in ("csr", "auto"):
             raise ValueError(
@@ -768,5 +1056,80 @@ def make_step_fn(cfg: "EngineConfig", plan: PlanArrays):
             size=new_size, matches=matches, states=states,
             exp_depth=exp_depth, match_buf=mbuf, overflow=overflow,
         )
+
+    return step
+
+
+def make_partitioned_step_fn(cfg: "EngineConfig", plan: PartPlanArrays):
+    """The partitioned expansion step ``(EngineState, SpillState) →
+    (EngineState, SpillState)``: :func:`make_step_fn`'s pop → expand →
+    counters → push pipeline, with children that owe intersections to
+    non-resident partitions routed to the worker's spill ring instead of
+    the live stack (DESIGN.md §9)."""
+    backend = PartitionedCsrStepBackend(cfg, plan)
+    e = cfg.expand_width
+
+    def step(st: EngineState, spill: SpillState):
+        v_loc, s_cap = st.st_depth.shape
+        pop = frontier.pop_top_k(
+            st.st_depth, st.st_map, st.st_used, st.st_cand,
+            st.base, st.size, e, store_used=cfg.store_used,
+        )
+
+        b = v_loc * e
+        part = backend.expand_lanes_part(
+            pop.depth.reshape(b),
+            pop.map.reshape(b, -1),
+            pop.used.reshape(b, -1),
+            pop.cand.reshape(b, -1),
+        )
+        lanes = part.lanes
+        sh2 = lambda x: x.reshape(v_loc, e)  # noqa: E731
+        sh3 = lambda x: x.reshape((v_loc, e) + x.shape[1:])  # noqa: E731
+        valid = sh2(lanes.valid) & pop.lane_on
+        is_match = sh2(lanes.is_match) & pop.lane_on
+        has_child = sh2(lanes.has_child) & pop.lane_on
+        do_spill = sh2(part.spill) & pop.lane_on
+        cand2 = sh3(lanes.cand2)
+        map2 = sh3(lanes.map2)
+        used2 = sh3(lanes.used2)
+        child_cand = sh3(lanes.child_cand)
+
+        states = st.states + jnp.sum(valid, axis=1, dtype=jnp.int32)
+        exp_depth = st.exp_depth + jnp.sum(
+            jnp.where(valid, pop.depth, 0), axis=1, dtype=jnp.int32
+        )
+        matches = st.matches + jnp.sum(is_match, axis=1, dtype=jnp.int32)
+
+        mbuf = st.match_buf
+        if cfg.collect_matches > 0:
+            mcap = mbuf.shape[1]
+            m_prefix = jnp.cumsum(is_match.astype(jnp.int32), axis=1) - is_match
+            m_slot = (st.matches[:, None] + m_prefix) % mcap
+            m_slot = jnp.where(is_match, m_slot, mcap)
+            vidx = jnp.arange(v_loc, dtype=jnp.int32)[:, None]
+            mbuf = mbuf.at[vidx, m_slot].set(map2, mode="drop")
+
+        spill = frontier.push_spill(
+            spill, do_spill,
+            pop.depth + 1, map2, child_cand,
+            sh2(part.pending), sh2(part.spill_part),
+        )
+
+        parent_keep = pop.lane_on & jnp.any(cand2 != 0, axis=-1)
+        st_depth, st_map, st_used, st_cand, new_size = frontier.push_entries(
+            st.st_depth, st.st_map, st.st_used, st.st_cand, st.base, st.size,
+            pop.k, parent_keep, has_child,
+            pop.depth, pop.map, pop.used, cand2,
+            pop.depth + 1, map2, used2, child_cand,
+            store_used=cfg.store_used,
+        )
+        overflow = st.overflow | frontier.overflowed(new_size, s_cap)
+        st = st._replace(
+            st_depth=st_depth, st_map=st_map, st_used=st_used, st_cand=st_cand,
+            size=new_size, matches=matches, states=states,
+            exp_depth=exp_depth, match_buf=mbuf, overflow=overflow,
+        )
+        return st, spill
 
     return step

@@ -346,6 +346,100 @@ def init_delta_state(
     )
 
 
+# ---------------------------------------------------------------------------
+# spill frontier (out-of-core partitioned enumeration, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+class SpillState(NamedTuple):
+    """Per-worker ring of entries parked for a non-resident partition.
+
+    A spill entry is a child whose candidate bitmap is only *partially*
+    constrained: ``sp_pending`` bit ``j`` set means parent slot ``j``'s
+    adjacency row lives outside the resident partition and has not been
+    intersected yet.  ``sp_part`` is the owning partition of the first
+    pending parent — the host drains rings at quiescence and routes entries
+    into per-partition pools.  The used-bitmap is not stored; intake
+    reconstructs it from the mapping prefix (``store_used=False``
+    representation).  Same overflow-watermark semantics as the live stack:
+    ``sp_overflow`` latches when a push would exceed capacity, and the
+    driver treats a near-full ring as a yield point (drain, then resume).
+    """
+
+    sp_depth: jnp.ndarray  # [V, C] int32
+    sp_map: jnp.ndarray  # [V, C, P] int32
+    sp_cand: jnp.ndarray  # [V, C, W] uint32 partially-constrained candidates
+    sp_pending: jnp.ndarray  # [V, C] int32 bitmask of unapplied parent slots
+    sp_part: jnp.ndarray  # [V, C] int32 partition owning first pending parent
+    sp_size: jnp.ndarray  # [V] int32
+    sp_overflow: jnp.ndarray  # [] bool — ring watermark breached
+
+
+def init_spill_state(v: int, spill_cap: int, p_pad: int, w: int) -> SpillState:
+    return SpillState(
+        sp_depth=jnp.zeros((v, spill_cap), jnp.int32),
+        sp_map=jnp.full((v, spill_cap, p_pad), -1, jnp.int32),
+        sp_cand=jnp.zeros((v, spill_cap, w), jnp.uint32),
+        sp_pending=jnp.zeros((v, spill_cap), jnp.int32),
+        sp_part=jnp.full((v, spill_cap), -1, jnp.int32),
+        sp_size=jnp.zeros((v,), jnp.int32),
+        sp_overflow=jnp.zeros((), jnp.bool_),
+    )
+
+
+def push_spill(
+    spill: SpillState,
+    flags: jnp.ndarray,  # [V, E] lanes that produced a spill entry
+    e_depth: jnp.ndarray,  # [V, E] int32
+    e_map: jnp.ndarray,  # [V, E, P] int32
+    e_cand: jnp.ndarray,  # [V, E, W] uint32
+    e_pending: jnp.ndarray,  # [V, E] int32
+    e_part: jnp.ndarray,  # [V, E] int32
+) -> SpillState:
+    """Append flagged lanes to each worker's spill ring (worker-local, no
+    cross-device traffic).  Slots are assigned by per-worker prefix sum;
+    pushes past capacity are dropped and latch ``sp_overflow`` — the driver
+    yields to the host for a drain well before that (watermark), so the
+    latch only fires if a single round overshoots the drain margin.
+    """
+    v_loc, c_cap = spill.sp_depth.shape
+    fl = flags.astype(jnp.int32)
+    offs = jnp.cumsum(fl, axis=1) - fl
+    slot = jnp.where(flags, spill.sp_size[:, None] + offs, c_cap)
+    slot_c = jnp.where(slot < c_cap, slot, c_cap)
+    vidx = jnp.arange(v_loc, dtype=jnp.int32)[:, None]
+    new_size = spill.sp_size + jnp.sum(fl, axis=1)
+    return SpillState(
+        sp_depth=spill.sp_depth.at[vidx, slot_c].set(e_depth, mode="drop"),
+        sp_map=spill.sp_map.at[vidx, slot_c].set(e_map, mode="drop"),
+        sp_cand=spill.sp_cand.at[vidx, slot_c].set(e_cand, mode="drop"),
+        sp_pending=spill.sp_pending.at[vidx, slot_c].set(e_pending, mode="drop"),
+        sp_part=spill.sp_part.at[vidx, slot_c].set(e_part, mode="drop"),
+        sp_size=jnp.minimum(new_size, c_cap).astype(jnp.int32),
+        sp_overflow=spill.sp_overflow | jnp.any(new_size > c_cap),
+    )
+
+
+def spill_watermark(spill: SpillState, margin: int) -> jnp.ndarray:
+    """True when any worker's ring is within ``margin`` pushes of capacity —
+    the driver's cue to return control to the host for a drain."""
+    c_cap = spill.sp_depth.shape[1]
+    return jnp.any(spill.sp_size >= c_cap - margin)
+
+
+def spill_partition_specs(axis: str) -> SpillState:
+    """PartitionSpecs for :class:`SpillState` under the mesh ``data`` axis."""
+    P = PartitionSpec
+    return SpillState(
+        sp_depth=P(axis, None),
+        sp_map=P(axis, None, None),
+        sp_cand=P(axis, None, None),
+        sp_pending=P(axis, None),
+        sp_part=P(axis, None),
+        sp_size=P(axis),
+        sp_overflow=P(),
+    )
+
+
 def state_partition_specs(axis: str) -> EngineState:
     """PartitionSpecs for :class:`EngineState`: worker-axis arrays sharded
     over ``axis``, loop scalars replicated."""

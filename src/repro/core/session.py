@@ -547,6 +547,15 @@ class Enumerator:
     ``step_backend=`` always wins.  The cache key carries the cfg *and*
     the bucket's ``n_t``, so one session can mix resolutions without
     collisions.
+
+    ``Enumerator(..., memory_budget_bytes=N)`` selects the **out-of-core
+    partitioned** backend (DESIGN.md §9): each target is row-partitioned
+    into the smallest count whose padded resident planes fit ``N`` bytes,
+    and enumeration streams the partitions through the device
+    (``step_backend="partitioned"`` with ``EngineConfig.n_partitions``
+    picks the count explicitly instead).  Results are bit-identical to the
+    monolithic backends; compile-cache and coalesce keys carry the
+    partition identity, and :meth:`warm` pre-traces hot buckets.
     """
 
     def __init__(
@@ -557,11 +566,22 @@ class Enumerator:
         mesh: Union["jax.sharding.Mesh", int, None] = None,
         domain_backend: str = "device",
         max_cache_entries: int = 0,
+        memory_budget_bytes: Optional[int] = None,
         **config_kwargs,
     ):
         cfg = config or EngineConfig(**config_kwargs)
         if config is not None and config_kwargs:
             cfg = dataclasses.replace(config, **config_kwargs)
+        if memory_budget_bytes is not None:
+            if memory_budget_bytes <= 0:
+                raise ValueError(
+                    f"memory_budget_bytes must be positive, got {memory_budget_bytes}"
+                )
+            # an explicit budget implies the out-of-core backend: the
+            # partition count is derived per target so the resident padded
+            # planes fit the budget (DESIGN.md §9)
+            cfg = dataclasses.replace(cfg, step_backend="partitioned")
+        self.memory_budget_bytes = memory_budget_bytes
         self.mesh = _coerce_mesh(mesh)
         if self.mesh is not None:
             axis = eng.mesh_worker_axis(self.mesh)
@@ -691,11 +711,19 @@ class Enumerator:
 
     def _engine_fn(self, cfg: EngineConfig, kind: str, pack: int, query: Query) -> Callable:
         shape_key = (cfg, kind, pack, eng.mesh_signature(self.mesh)) + query.bucket
-        if eng.resolve_step_backend_for_plan(cfg, query.plan) == "csr":
+        resolved = eng.resolve_step_backend_for_plan(cfg, query.plan)
+        if resolved == "csr":
             # csr plan arrays carry density-dependent shapes (deg_cap, nnz);
             # without them in the key, a same-bucket different-density query
             # would count as a cache hit while jit silently retraces
             shape_key = shape_key + extend.csr_shape_bucket(query.plan)
+        elif resolved == "partitioned":
+            # partition identity: same-bucket targets with different
+            # partitionings (count or padded per-partition shapes) must not
+            # share a compiled partitioned engine
+            shape_key = shape_key + extend.partitioned_shape_bucket(
+                query.plan, max(1, cfg.n_partitions)
+            )
         # the trailing fingerprint versions the entry to one index content:
         # after an index update, same-shape queries get a fresh entry (no
         # false hit on a retired version, and retired versions can be
@@ -713,7 +741,9 @@ class Enumerator:
             fn = self._traces.get(shape_key)
         if fn is None:
             self.compiles += 1
-            if kind == "single":
+            if kind == "part":
+                fn = eng.make_partitioned_engine_fn(cfg, self.mesh)
+            elif kind == "single":
                 if self.mesh is not None:
                     fn = eng.make_sharded_engine_fn(
                         cfg, self.mesh, n_t=query.plan.n_t,
@@ -929,11 +959,114 @@ class Enumerator:
         — including ``"auto"``, which flips to the sparse layout past
         ``extend.CSR_AUTO_NT`` target nodes (the cache key carries both the
         cfg and ``n_t``, so the resolution is stable per entry)."""
+        if eng.resolve_step_backend_for_plan(cfg, query.plan) == "partitioned":
+            return self._run_partitioned(cfg, query)
         fn = self._engine_fn(cfg, "single", 1, query)
         arrays = self._plan_arrays(cfg, query)
         state = eng.init_state(query.plan, cfg)
         final = jax.block_until_ready(fn(arrays, state))
         return eng.result_from_state(final, cfg)
+
+    # -- execution: out-of-core partitioned (DESIGN.md §9) ------------------
+
+    def _partition_count(self, cfg: EngineConfig, plan: SearchPlan) -> int:
+        """Partition count for a plan under this session: an explicit
+        ``EngineConfig.n_partitions`` wins; otherwise the session's
+        ``memory_budget_bytes`` derives the smallest count whose padded
+        resident planes fit; otherwise 1 (degenerate — the whole target is
+        one resident partition)."""
+        if cfg.n_partitions > 0:
+            return cfg.n_partitions
+        if self.memory_budget_bytes is not None:
+            return extend.plan_partitions_budget(
+                plan, self.memory_budget_bytes
+            ).n_parts
+        return 1
+
+    def _run_partitioned(self, cfg: EngineConfig, query: Query) -> EngineResult:
+        """One out-of-core run: the host scheduling loop of
+        :func:`repro.core.engine.run_partitioned`, with every inner-engine
+        (re)build routed through this session's compile cache — warm legs
+        and repeat queries are cache hits, and the counters stay honest."""
+        runc = dataclasses.replace(
+            cfg,
+            step_backend="partitioned",
+            n_partitions=self._partition_count(cfg, query.plan),
+        )
+        return eng.run_partitioned(
+            query.plan,
+            runc,
+            mesh=self.mesh,
+            engine_factory=lambda c: self._engine_fn(c, "part", 1, query),
+        )
+
+    def warm(
+        self,
+        queries: Iterable[Union[Query, Graph]],
+        collect_matches: int = 0,
+        lanes: int = 1,
+    ) -> Dict[str, int]:
+        """Pre-trace the engines the given queries will need (PR-6
+        follow-up: proactive compile-cache warmup).
+
+        Each query's engine is resolved through the normal compile cache
+        and invoked once on an **inert** state (zero stack sizes — the
+        device loop exits immediately), which forces the XLA compile without
+        enumerating anything.  Subsequent :meth:`run` / :meth:`run_pack`
+        submits of same-key queries are then pure cache hits, so a serving
+        process can move every compile stall to startup
+        (``ServiceConfig.warmup_profile``).  Pass the ``collect_matches``
+        budget the later submits will use — the buffer size is part of the
+        traced shapes.  ``lanes > 1`` warms the vmapped *pack* engine of
+        that width instead of the single-query path (what
+        :meth:`run_pack` dispatches actually invoke; ignored where packs
+        route singly — mesh and partitioned sessions).
+
+        Returns ``{"warmed": queries traced, "compiles": fresh XLA
+        compilations spent}`` (0 fresh compiles means everything was
+        already warm).
+        """
+        before = self.compiles
+        warmed = 0
+        for q in self._coerce_all(queries):
+            if not q.plan.satisfiable:
+                continue
+            cfg = self.config
+            if collect_matches:
+                cfg = dataclasses.replace(cfg, collect_matches=collect_matches)
+            if eng.resolve_step_backend_for_plan(cfg, q.plan) == "partitioned":
+                runc = dataclasses.replace(
+                    cfg,
+                    step_backend="partitioned",
+                    n_partitions=self._partition_count(cfg, q.plan),
+                )
+                fn = self._engine_fn(runc, "part", 1, q)
+                pp = extend.plan_partitions(q.plan, runc.n_partitions)
+                arrays = extend.make_part_plan_arrays(q.plan, pp, 0)
+                st = _inert_state(eng.init_state(q.plan, runc))
+                spill = frontier.init_spill_state(
+                    runc.n_workers,
+                    runc.resolved_spill_cap(q.plan.p_pad),
+                    q.plan.p_pad,
+                    q.plan.w,
+                )
+                jax.block_until_ready(fn(arrays, st, spill))
+            elif lanes > 1 and self.mesh is None:
+                # the pack path stacks per-lane arrays/states; an all-inert
+                # pack of the dispatch width traces the same vmapped engine
+                fn = self._engine_fn(cfg, "batch", lanes, q)
+                arrays = eng.plan_arrays_for(cfg, q.plan)
+                st = _inert_state(eng.init_state(q.plan, cfg))
+                stacked = jax.tree.map(lambda x: jnp.stack([x] * lanes), arrays)
+                states = jax.tree.map(lambda x: jnp.stack([x] * lanes), st)
+                jax.block_until_ready(fn(stacked, states))
+            else:
+                fn = self._engine_fn(cfg, "single", 1, q)
+                arrays = self._plan_arrays(cfg, q)
+                st = _inert_state(eng.init_state(q.plan, cfg))
+                jax.block_until_ready(fn(arrays, st))
+            warmed += 1
+        return {"warmed": warmed, "compiles": self.compiles - before}
 
     def _plan_arrays(self, cfg: EngineConfig, query: Query,
                      plan: Optional[SearchPlan] = None):
@@ -1195,8 +1328,16 @@ class Enumerator:
         """
         cfg = cfg or self.config
         key = query.bucket + (query.index_fingerprint,)
-        if eng.resolve_step_backend_for_plan(cfg, query.plan) == "csr":
+        resolved = eng.resolve_step_backend_for_plan(cfg, query.plan)
+        if resolved == "csr":
             key = key + extend.csr_shape_bucket(query.plan)
+        elif resolved == "partitioned":
+            # partition identity: two targets sharing a bucket but not a
+            # partitioning (count or padded per-partition shapes) run
+            # different compiled engines and must not coalesce
+            key = key + extend.partitioned_shape_bucket(
+                query.plan, self._partition_count(cfg, query.plan)
+            )
         return key
 
     def run_pack(
@@ -1237,7 +1378,11 @@ class Enumerator:
                     f"run_pack requires one coalesce_key per pack, got {len(keys)}: "
                     f"{sorted(keys)}"
                 )
-            if self.mesh is not None:
+            if self.mesh is not None or cfg.step_backend == "partitioned":
+                # sharded and out-of-core engines run queries singly (the
+                # pack vmap composes with neither shard_map nor the host
+                # partition-scheduling loop); the coalesce key still
+                # grouped them, so the compile cache is shared
                 for i in live:
                     ms = self.run(qs[i], collect_matches=cfg.collect_matches)
                     ms.query_index = i
@@ -1265,10 +1410,10 @@ class Enumerator:
         qs: List[Query] = self._coerce_all(queries)
         cfg = self.config
 
-        if self.mesh is not None:
-            # The pack vmap does not compose with shard_map engines yet:
-            # under a mesh each query runs through the (cached) sharded
-            # single-query engine, yielding in input order.
+        if self.mesh is not None or cfg.step_backend == "partitioned":
+            # The pack vmap composes with neither shard_map engines nor the
+            # out-of-core host scheduling loop: each query runs through the
+            # (cached) single-query path, yielding in input order.
             for i, q in enumerate(qs):
                 if not q.plan.satisfiable:
                     yield self._matchset(q, i, _empty_engine_result(), 0.0)

@@ -91,14 +91,28 @@ def main() -> int:
                     help="shard worker stacks over N devices (0 = no mesh; "
                     "on CPU forces N virtual XLA devices)")
     ap.add_argument("--step-backend",
-                    choices=("jnp", "pallas", "csr", "auto"), default="jnp",
+                    choices=("jnp", "pallas", "csr", "auto", "partitioned"),
+                    default="jnp",
                     help="expansion-step backend (DESIGN.md §6.2): 'jnp' "
                     "loose ops, 'pallas' the fused extend_step kernel "
                     "(interpret mode off-TPU — validation, not speed), "
                     "'csr' the sparse adjacency walk for huge targets "
-                    "(§6.4), 'auto' = csr past 32,768 target nodes")
+                    "(§6.4), 'auto' = csr past 32,768 target nodes, "
+                    "'partitioned' the out-of-core streaming walk (§9)")
+    ap.add_argument("--mem-budget", type=int, default=0, metavar="BYTES",
+                    help="device-memory budget for resident target planes "
+                    "(DESIGN.md §9): partitions each target so its padded "
+                    "resident CSR planes fit BYTES and streams the "
+                    "partitions through the device (implies the "
+                    "partitioned backend); 0 = whole target resident")
+    ap.add_argument("--partitions", type=int, default=0, metavar="N",
+                    help="explicit target partition count for the "
+                    "partitioned backend (0 = derive from --mem-budget, "
+                    "or 1 if neither is given)")
     args = ap.parse_args()
     mode = "packed" if args.packed else args.mode
+    if args.partitions and args.step_backend != "partitioned":
+        args.step_backend = "partitioned"
 
     mesh = None
     if args.devices:
@@ -114,8 +128,12 @@ def main() -> int:
         scale=args.scale, seed=args.seed,
     )
     cfg = EngineConfig(n_workers=args.workers, expand_width=args.expand,
-                       step_backend=args.step_backend)
-    session = Enumerator(config=cfg, variant=args.variant, mesh=mesh)
+                       step_backend=args.step_backend,
+                       n_partitions=args.partitions)
+    session = Enumerator(
+        config=cfg, variant=args.variant, mesh=mesh,
+        memory_budget_bytes=args.mem_budget or None,
+    )
 
     indices: dict = {}
     t0 = time.perf_counter()

@@ -65,6 +65,7 @@ COUNTERS = (
     "cache_invalidated",    # compile-cache entries evicted on index swap
     "dispatches",           # engine pack invocations
     "chunks",               # ResultChunks streamed
+    "warmup_compiles",      # compiles spent by start()'s warmup_profile
 )
 
 

@@ -71,6 +71,16 @@ class ServiceConfig:
         server must not grow the cache without limit.
       default_collect: match-materialization budget (per worker) applied
         when ``submit(collect=None)``; 0 = counting mode, no chunks.
+      memory_budget_bytes: device-memory budget for resident target planes
+        (DESIGN.md §9).  When set (and the service builds its own session)
+        the enumerator runs the out-of-core partitioned backend: every
+        target is row-partitioned so its padded resident planes fit the
+        budget, and partitions stream through the device.  ``None`` keeps
+        the whole target resident (the monolithic backends).
+      warmup_profile: patterns (or prepared queries) whose engines are
+        pre-traced by ``Enumerator.warm`` during :meth:`start`, before the
+        dispatcher accepts work — moves the compile stalls of the hot
+        coalesce buckets from first-submit latency to startup.
     """
 
     max_lanes: int = 8
@@ -80,6 +90,8 @@ class ServiceConfig:
     chunk_size: int = 256
     max_cache_entries: int = 256
     default_collect: int = 0
+    memory_budget_bytes: Optional[int] = None
+    warmup_profile: tuple = ()
 
 
 class EnumerationService:
@@ -115,7 +127,9 @@ class EnumerationService:
         else:
             self.enumerator = Enumerator(
                 index, config=config,
-                max_cache_entries=sc.max_cache_entries, **config_kwargs,
+                max_cache_entries=sc.max_cache_entries,
+                memory_budget_bytes=sc.memory_budget_bytes,
+                **config_kwargs,
             )
         self._clock = clock
         self.metrics = ServiceMetrics(clock=clock)
@@ -134,11 +148,26 @@ class EnumerationService:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._drain_on_stop = True
+        self._warmed = False
 
     # -- lifecycle ---------------------------------------------------------
 
     def start(self) -> "EnumerationService":
-        """Start the dispatcher thread (idempotent)."""
+        """Start the dispatcher thread (idempotent).
+
+        If ``ServiceConfig.warmup_profile`` names patterns, their engines
+        are pre-traced synchronously first (``Enumerator.warm`` with the
+        service's ``default_collect`` budget — the cfg first submits will
+        use), so the dispatcher opens with the hot coalesce buckets
+        already compiled."""
+        if self.service_config.warmup_profile and not self._warmed:
+            self._warmed = True
+            n = self.enumerator.warm(
+                self.service_config.warmup_profile,
+                collect_matches=self.service_config.default_collect,
+                lanes=self.service_config.max_lanes,
+            )
+            self.metrics.inc("warmup_compiles", n["compiles"])
         if self._thread is None or not self._thread.is_alive():
             self._stop.clear()
             self._thread = threading.Thread(

@@ -1,0 +1,271 @@
+"""Out-of-core partitioned enumeration (DESIGN.md §9): partitioner
+invariants, budget derivation, spill-ring watermark drains, the partitioned
+numpy oracle (scheduling-stat exact vs the engine), and compile-cache
+warmup accounting.
+
+Cross-backend result conformance (n_parts x case matrix, mesh) lives in
+``tests/test_backend_conformance.py``; this file covers the machinery
+underneath it.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Enumerator, SubgraphIndex
+from repro.core import engine as eng
+from repro.core import extend, ref
+from repro.core.plan import build_csr_plan
+from tests.conftest import (
+    extract_connected_pattern,
+    power_law_target,
+    random_graph,
+)
+
+
+def _sparse_case(rng, n=300):
+    tgt = power_law_target(rng, n, avg_deg=3.0, n_labels=6)
+    pat = extract_connected_pattern(rng, tgt, 4)
+    return tgt, pat
+
+
+# ---------------------------------------------------------------------------
+# partitioner invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_parts", (1, 2, 3, 5, 8))
+def test_partition_preserves_every_row(rng, n_parts):
+    """Concatenating the partitions' local rows reproduces the whole CSR
+    exactly: same row slice (global column ids) for every plane and global
+    row, nnz conserved, node ranges contiguous and covering."""
+    tgt, _ = _sparse_case(rng, n=200)
+    whole = tgt.csr_planes()
+    pp = tgt.partition(n_parts=n_parts)
+    ns = pp.node_start
+    assert ns[0] == 0 and ns[-1] == whole.n_t == pp.n_t
+    assert np.all(np.diff(ns) >= 0)
+    assert sum(p.nnz for p in pp.parts) == whole.nnz
+    for pid, part in enumerate(pp.parts):
+        lo, hi = int(ns[pid]), int(ns[pid + 1])
+        assert part.n_t == hi - lo
+        for pl in range(whole.n_planes):
+            for v in range(lo, hi):
+                want = whole.indices[whole.indptr[pl, v]:whole.indptr[pl, v + 1]]
+                got = part.indices[
+                    part.indptr[pl, v - lo]:part.indptr[pl, v - lo + 1]]
+                np.testing.assert_array_equal(want, got)
+
+
+def test_partition_cut_accounting(rng):
+    """n_parts=1 has no cut; multi-part cut counts exactly the arcs whose
+    endpoint lives in another partition (never replicated)."""
+    tgt, _ = _sparse_case(rng, n=150)
+    whole = tgt.csr_planes()
+    assert tgt.partition(n_parts=1).cut_edges == 0
+    pp = tgt.partition(n_parts=3)
+    want = 0
+    for pid, part in enumerate(pp.parts):
+        lo, hi = int(pp.node_start[pid]), int(pp.node_start[pid + 1])
+        want_pid = 0
+        for pl in range(0, part.n_planes, 2):  # out-planes: p = elab*2 + 0
+            s, e = int(part.indptr[pl, 0]), int(part.indptr[pl, part.n_t])
+            cols = part.indices[s:e]
+            want_pid += int(((cols < lo) | (cols >= hi)).sum())
+        assert int(pp.cut_per_part[pid]) == want_pid
+        want += want_pid
+    assert pp.cut_edges == want
+    assert pp.part_of(np.arange(whole.n_t)).min() == 0
+    assert pp.part_of(np.arange(whole.n_t)).max() == pp.n_parts - 1
+
+
+def test_partition_budget_mode(rng):
+    """max_bytes= picks the smallest count whose largest partition fits;
+    argument validation rejects none/both selectors."""
+    tgt, _ = _sparse_case(rng, n=200)
+    whole = tgt.csr_planes()
+    budget = whole.nbytes // 3
+    pp = tgt.partition(max_bytes=budget)
+    assert pp.max_resident_nbytes <= budget
+    assert pp.n_parts > 1
+    # minimality: one fewer partition would not fit
+    if pp.n_parts > 1:
+        smaller = tgt.partition(n_parts=pp.n_parts - 1)
+        assert smaller.max_resident_nbytes > budget
+    with pytest.raises(ValueError, match="exactly one"):
+        tgt.partition(n_parts=2, max_bytes=budget)
+    with pytest.raises(ValueError, match="exactly one"):
+        tgt.partition()
+    with pytest.raises(ValueError):
+        tgt.partition(n_parts=0)
+
+
+def test_plan_partitions_budget_bounds_padded_bytes(rng):
+    """plan_partitions_budget bounds the *padded* resident footprint (what
+    the device holds under the shared compile) and caches so the engine's
+    by-count lookup returns the identical object."""
+    tgt, pat = _sparse_case(rng, n=300)
+    plan = build_csr_plan(pat, tgt)
+    whole = extend.part_resident_nbytes(extend.plan_partitions(plan, 1))
+    budget = whole // 2
+    pp = extend.plan_partitions_budget(plan, budget)
+    assert extend.part_resident_nbytes(pp) <= budget
+    assert extend.plan_partitions(plan, pp.n_parts) is pp
+    assert extend.plan_partitions_budget(plan, budget) is pp  # cached
+    with pytest.raises(ValueError, match="cannot (fit|hold)"):
+        extend.plan_partitions_budget(plan, 64)
+
+
+# ---------------------------------------------------------------------------
+# partitioned oracle: results AND scheduling stats equal the engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_parts", (1, 2, 3))
+def test_partitioned_oracle_matches_monolithic(rng, n_parts):
+    """The sequential partitioned oracle enumerates exactly what the
+    monolithic oracle does on the same plan — partitioning is invisible in
+    matches, states, and sorted mappings."""
+    tgt, pat = _sparse_case(rng)
+    plan = build_csr_plan(pat, tgt)
+    mono = ref.ref_enumerate(pat, tgt, plan=plan, record_mappings=True)
+    part = ref.ref_enumerate_partitioned(
+        pat, tgt, n_parts, plan=plan, record_mappings=True)
+    assert (part.matches, part.states) == (mono.matches, mono.states)
+    assert part.mappings == sorted(mono.mappings)
+
+
+@pytest.mark.parametrize("n_parts", (1, 2, 3, 5))
+def test_engine_scheduling_agrees_with_oracle(rng, n_parts):
+    """The engine's partition-scheduling loop reproduces the oracle's
+    *scheduling* behavior exactly — partition visits, spilled extensions,
+    and dead spills — not just the enumeration outputs.  This pins the
+    deepest-pool swap policy and the pending-parent intake semantics."""
+    tgt, pat = _sparse_case(rng)
+    plan = build_csr_plan(pat, tgt)
+    oracle = ref.ref_enumerate_partitioned(pat, tgt, n_parts, plan=plan)
+    stats = {}
+    cfg = EngineConfig(n_workers=4, expand_width=2,
+                       step_backend="partitioned", n_partitions=n_parts)
+    got = eng.run_partitioned(plan, cfg, stats=stats)
+    assert (got.matches, got.states) == (oracle.matches, oracle.states)
+    assert stats["n_parts"] == oracle.n_parts
+    assert stats["visits"] == oracle.visits
+    assert stats["spilled"] == oracle.spilled
+    assert stats["dead_spills"] == oracle.dead_spills
+
+
+# ---------------------------------------------------------------------------
+# spill-ring watermark: tiny rings force mid-partition host drains
+# ---------------------------------------------------------------------------
+
+def test_tiny_spill_ring_watermark_drains(rng):
+    """A spill ring barely above the watermark margin forces the inner loop
+    to yield for host drains many times per partition visit (legs >>
+    visits) — results must not change."""
+    tgt, pat = _sparse_case(rng)
+    plan = build_csr_plan(pat, tgt)
+    base = eng.run(plan, EngineConfig(n_workers=4, expand_width=2,
+                                      step_backend="csr"))
+    cfg = EngineConfig(n_workers=4, expand_width=2,
+                       step_backend="partitioned", n_partitions=4)
+    margin = eng.part_spill_margin(cfg)
+    tiny = EngineConfig(n_workers=4, expand_width=2,
+                        step_backend="partitioned", n_partitions=4,
+                        spill_cap=margin + 2)
+    stats, stats_tiny = {}, {}
+    got = eng.run_partitioned(plan, cfg, stats=stats)
+    got_tiny = eng.run_partitioned(plan, tiny, stats=stats_tiny)
+    assert (got.matches, got.states) == (base.matches, base.states)
+    assert (got_tiny.matches, got_tiny.states) == (base.matches, base.states)
+    assert stats_tiny["spilled"] == stats["spilled"]
+    if stats["spilled"]:
+        # a ring barely above the margin cannot buffer a whole leg's
+        # spills: the inner loop must yield for extra host drains
+        assert stats_tiny["rounds"] > stats_tiny["legs"]
+        assert stats_tiny["rounds"] > stats["rounds"]
+
+
+def test_partitioned_tiny_stack_retries(rng):
+    """Worker-stack overflow inside a leg is retried leg-locally at doubled
+    capacity until it fits — the result never undercounts."""
+    tgt, pat = _sparse_case(rng, n=150)
+    plan = build_csr_plan(pat, tgt)
+    base = eng.run(plan, EngineConfig(n_workers=2, expand_width=2,
+                                      step_backend="csr"))
+    stats = {}
+    cfg = EngineConfig(n_workers=2, expand_width=2, stack_cap=8,
+                       step_backend="partitioned", n_partitions=3)
+    got = eng.run_partitioned(plan, cfg, stats=stats)
+    assert not got.overflow
+    assert (got.matches, got.states) == (base.matches, base.states)
+
+
+# ---------------------------------------------------------------------------
+# session integration: budget plumbing + warm() compile accounting
+# ---------------------------------------------------------------------------
+
+def test_session_memory_budget_derives_partitions(rng):
+    """Enumerator(memory_budget_bytes=...) forces the partitioned backend,
+    derives the count from the padded resident bytes, and matches the
+    monolithic run."""
+    tgt, pat = _sparse_case(rng)
+    idx = SubgraphIndex.build(tgt)
+    mono = Enumerator(idx, n_workers=2, expand_width=2, step_backend="csr")
+    want = mono.run(mono.prepare(pat))
+
+    q0 = mono.prepare(pat)
+    whole = extend.part_resident_nbytes(extend.plan_partitions(q0.plan, 1))
+    s = Enumerator(idx, n_workers=2, expand_width=2,
+                   memory_budget_bytes=whole // 2)
+    assert s.config.step_backend == "partitioned"
+    got = s.run(s.prepare(pat))
+    assert (got.matches, got.states) == (want.matches, want.states)
+    with pytest.raises(ValueError):
+        Enumerator(idx, memory_budget_bytes=0)
+
+
+@pytest.mark.parametrize("backend_kw", (
+    dict(step_backend="csr"),
+    dict(step_backend="partitioned", n_partitions=2),
+))
+def test_warm_spends_compiles_upfront(rng, backend_kw):
+    """Enumerator.warm() pays the XLA compile at warmup time; subsequent
+    same-key submits are pure cache hits (zero fresh compiles) — for the
+    monolithic and the partitioned engines alike."""
+    tgt, pat = _sparse_case(rng, n=120)
+    idx = SubgraphIndex.build(tgt)
+    s = Enumerator(idx, n_workers=2, expand_width=2, **backend_kw)
+    q = s.prepare(pat)
+    out = s.warm([q])
+    assert out["warmed"] == 1
+    assert out["compiles"] >= 1
+    compiles = s.cache_info()["compiles"]
+    ms = s.run(q)
+    assert ms.states > 0
+    assert s.cache_info()["compiles"] == compiles  # cache hit, no compile
+    assert s.warm([q]) == {"warmed": 1, "compiles": 0}  # already warm
+
+
+def test_warm_pack_lanes_covers_dispatch_width(rng):
+    """warm(lanes=N) traces the vmapped pack engine run_pack uses, so a
+    warmed service's first dispatch compiles nothing."""
+    tgt, _ = _sparse_case(rng, n=120)
+    pats = [extract_connected_pattern(rng, tgt, 4) for _ in range(3)]
+    idx = SubgraphIndex.build(tgt)
+    s = Enumerator(idx, n_workers=2, expand_width=2)
+    qs = [s.prepare(p) for p in pats]
+    assert s.warm(qs, lanes=4)["compiles"] >= 1
+    compiles = s.cache_info()["compiles"]
+    s.run_pack(qs, pack_size=4)
+    assert s.cache_info()["compiles"] == compiles
+
+
+def test_warm_skips_unsatisfiable(rng):
+    """Unsatisfiable queries never reach the engine, so warm() spends
+    nothing on them."""
+    from repro.core.graph import Graph
+
+    tgt = random_graph(rng, 20, 40, n_labels=2)
+    bad = Graph.from_edges(2, [(0, 1)], labels=[7, 0], undirected=True)
+    s = Enumerator(SubgraphIndex.build(tgt), n_workers=2, expand_width=2)
+    q = s.prepare(bad)  # domain-filter compile happens here, not in warm
+    assert not q.plan.satisfiable
+    assert s.warm([q]) == {"warmed": 0, "compiles": 0}

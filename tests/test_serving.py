@@ -373,3 +373,120 @@ def test_integration_mixed_dense_csr_clients(rng):
     stats = svc.stats()
     assert stats["completed"] == len(queries)
     assert stats["dispatches"] >= n_buckets
+
+
+# ---------------------------------------------------------------------------
+# metrics: sliding windows (direct unit tests)
+# ---------------------------------------------------------------------------
+
+from repro.serve import metrics as metrics_mod  # noqa: E402
+
+
+def test_latency_window_empty_and_single():
+    """Empty windows report 0.0 everywhere (no NaNs, no exceptions); one
+    observation is every percentile."""
+    w = metrics_mod.LatencyWindow(cap=8)
+    assert len(w) == 0
+    assert w.percentile(50) == 0.0
+    assert w.percentile(99) == 0.0
+    assert w.mean() == 0.0
+    assert w.max() == 0.0
+    w.record(0.25)
+    for p in (0, 50, 99, 100):
+        assert w.percentile(p) == 0.25
+    assert w.mean() == 0.25 and w.max() == 0.25
+
+
+def test_latency_window_nearest_rank_exact():
+    """Nearest-rank percentiles on a known population, unsorted insertion
+    order."""
+    w = metrics_mod.LatencyWindow(cap=16)
+    for v_ in (5.0, 1.0, 3.0, 2.0, 4.0):  # sorted: [1..5]
+        w.record(v_)
+    assert w.percentile(50) == 2.0   # round(0.5*5)=2 -> index 1
+    assert w.percentile(90) == 4.0   # round(4.5)=4  -> index 3
+    assert w.percentile(99) == 5.0
+    assert w.percentile(0) == 1.0
+    assert w.percentile(100) == 5.0
+
+
+def test_latency_window_wraparound_keeps_most_recent():
+    """Past cap, old observations fall out: percentiles cover exactly the
+    last cap records."""
+    w = metrics_mod.LatencyWindow(cap=100)
+    for v_ in range(250):
+        w.record(float(v_))
+    assert len(w) == 100            # retained: [150.0 .. 249.0]
+    assert w.max() == 249.0
+    assert w.mean() == (150.0 + 249.0) / 2
+    assert w.percentile(50) == 199.0   # rank round(50)=50 -> index 49
+    assert w.percentile(99) == 248.0   # rank round(99)=99 -> index 98
+    assert w.percentile(100) == 249.0
+
+
+def test_service_metrics_concurrent_record():
+    """Counters and windows stay consistent under concurrent observers
+    (client threads + dispatcher thread in the real service)."""
+    m = metrics_mod.ServiceMetrics(window=4096)
+    n_threads, per_thread = 8, 400
+
+    def observer(tid):
+        for i in range(per_thread):
+            m.observe_queue_wait(0.001 * tid)
+            m.observe_completion(1.0, retries=(i % 2), ok=(i % 10 != 0))
+            m.inc("submitted")
+
+    threads = [threading.Thread(target=observer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    total = n_threads * per_thread
+    snap = m.snapshot()
+    assert snap["submitted"] == total
+    assert snap["completed"] + snap["failed"] == total
+    assert snap["failed"] == n_threads * (per_thread // 10)
+    assert snap["retries"] == n_threads * (per_thread // 2)
+    assert snap["latency_p50_s"] == 1.0 and snap["latency_max_s"] == 1.0
+    assert snap["qps"] >= 0.0
+
+
+def test_snapshot_schema_stable_and_formats():
+    """Every COUNTERS name appears in the snapshot (zeros included) and
+    format_snapshot renders without KeyError."""
+    m = metrics_mod.ServiceMetrics()
+    snap = m.snapshot()
+    for name in metrics_mod.COUNTERS:
+        assert name in snap
+    assert "warmup_compiles" in snap
+    assert isinstance(metrics_mod.format_snapshot(snap), str)
+
+
+# ---------------------------------------------------------------------------
+# warmup profile: compiles move to start(), first submits are cache hits
+# ---------------------------------------------------------------------------
+
+def test_warmup_profile_precompiles_dispatch_engines(rng):
+    """ServiceConfig.warmup_profile pre-traces the pack engines during
+    start(); the first real submits then compile nothing new."""
+    tgt, pats = _corpus(rng, n_pats=3)
+    index = SubgraphIndex.build(tgt)
+    svc = EnumerationService(
+        index, config=CFG,
+        service=ServiceConfig(max_lanes=4, batch_window_s=0.001,
+                              warmup_profile=tuple(pats)),
+    )
+    with svc:
+        warm_spent = svc.stats()["warmup_compiles"]
+        assert warm_spent >= 1
+        compiles = svc.enumerator.cache_stats()["compiles"]
+        handles = [svc.submit(p) for p in pats]
+        for h in handles:
+            assert h.result(timeout=240.0).states >= 0
+        assert svc.enumerator.cache_stats()["compiles"] == compiles
+        assert svc.stats()["warmup_compiles"] == warm_spent
+    # start() is idempotent: re-entering does not re-warm
+    with svc:
+        assert svc.stats()["warmup_compiles"] == warm_spent
