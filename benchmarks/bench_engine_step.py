@@ -287,9 +287,12 @@ def main() -> None:
                     help="alternate backend to sweep against jnp")
     ap.add_argument("--smoke", action="store_true",
                     help="small corpus for CI (same assertions)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the JSON payload to PATH")
     args = ap.parse_args()
     out = run(smoke=args.smoke, scale=args.scale, workers=args.workers,
               seed=args.seed, step_backend=args.step_backend)
+    common.write_json_path(args.json, out)
     verdict = (
         f"{out['speedup_same_set']:.2f}x (asserted >= {SPEEDUP_FLOOR}x)"
         if out["speedup_asserted"]

@@ -1,0 +1,202 @@
+"""Hub-heavy targets: edge-centric seeding + degree-bucketed CSR walk
+(DESIGN.md §10).
+
+  PYTHONPATH=src python -m benchmarks.bench_hubheavy            # 33k nodes
+  PYTHONPATH=src python -m benchmarks.bench_hubheavy --smoke    # CI-sized
+
+A power-law target with a flat exponent puts a few hub rows of degree
+``≈ n_t`` next to a near-isolated tail, so the PR-5 CSR walk — every lane
+scanning to the *global* ``deg_cap`` — wastes almost its whole trip count
+on tail rows, and the depth-0 vertex root split opens a search tree from
+every domain node when only a rare edge class can ever host the pattern's
+anchor edge.  This bench runs the tentpole configuration (plan built with
+``seed_edge="auto"``, ``root_seeding="edge"``, ``csr_walk="bucketed"``)
+against the PR-5 baseline (``root_seeding="vertex"``,
+``csr_walk="flat"``) end-to-end and asserts:
+
+* **frontier shrink** (always): the edge-seeded root frontier (arcs of
+  the rarest compatible edge class) is ≥ 10× smaller than the vertex
+  root frontier (``|dom[0]|``);
+* **identity** (always): both runs produce the same match count, equal to
+  the sequential reference oracle on the same plan;
+* **speedup** (full-size runs only; ``--smoke`` reports without
+  asserting): the tentpole run is ≥ 2× faster end-to-end than the
+  baseline.  Both sides run the jitted jnp-math walk (``use_pallas``
+  off), so the comparison is compiled-vs-compiled and the gate applies
+  on any host; a Pallas-interpret configuration would be exempt, but
+  this bench never routes the Pallas kernels.
+
+Emits CSV rows, the ``artifacts/bench/hubheavy.json`` artifact, and —
+via the shared ``--json PATH`` writer — the committed ``BENCH_9.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+try:
+    from benchmarks import common
+except ImportError:  # executed from an arbitrary cwd
+    import repro.bench  # noqa: F401  (puts the repo root on sys.path)
+    from benchmarks import common
+
+from repro.core import EngineConfig, engine as eng, frontier
+from repro.core.graph import popcount
+from repro.core.plan import build_csr_plan
+from repro.core.ref import ref_enumerate
+from repro.data import graphgen
+
+HUB_NT = 33_067  # pdbsv1 scale (Table 1), flattened exponent → hub-heavy
+SMOKE_NT = 4_000
+FRONTIER_FLOOR = 10.0  # edge seeds must shrink the root frontier this much
+SPEEDUP_FLOOR = 2.0  # tentpole vs PR-5 baseline, full-size compiled runs
+
+
+def _timed_run(plan, cfg):
+    """Warm (compile + first execution), then one timed run."""
+    eng.run(plan, cfg)
+    t0 = time.perf_counter()
+    res = eng.run(plan, cfg)
+    return res, time.perf_counter() - t0
+
+
+def run(n: int, workers: int = 8, seed: int = 7, smoke: bool = False) -> dict:
+    tgt = graphgen.power_law_graph(
+        n, avg_deg=4.0, alpha=1.5, n_labels=32, seed=seed,
+    )
+    deg = tgt.out_degrees() + tgt.in_degrees()
+    pat = graphgen.extract_pattern(
+        tgt, 6, seed=seed, start=int(np.argsort(deg)[-80]),
+    )
+    assert pat.m > 0, "pattern extraction degenerated"
+
+    vplan = build_csr_plan(pat, tgt, variant="ri")
+    eplan = build_csr_plan(pat, tgt, variant="ri", seed_edge="auto")
+    assert eplan.seed_edge is not None
+
+    # --- root frontier: |dom[0]| vertex roots vs seed-class arcs ----------
+    vertex_frontier = int(popcount(vplan.dom_bits[0]).sum())
+    sd, _, _ = frontier.root_seed_entries(eplan)
+    edge_frontier = int(sd.shape[0])
+    shrink = vertex_frontier / max(edge_frontier, 1)
+    assert shrink >= FRONTIER_FLOOR, (
+        f"edge seeding must shrink the root frontier >= {FRONTIER_FLOOR}x: "
+        f"{vertex_frontier} vertex roots vs {edge_frontier} edge seeds "
+        f"({shrink:.1f}x)"
+    )
+
+    # --- end-to-end: PR-5 baseline vs the tentpole configuration ---------
+    base_cfg = EngineConfig(n_workers=workers, expand_width=4,
+                            step_backend="csr", root_seeding="vertex",
+                            csr_walk="flat")
+    new_cfg = EngineConfig(n_workers=workers, expand_width=4,
+                           step_backend="csr", root_seeding="edge",
+                           csr_walk="bucketed")
+    base, t_base = _timed_run(vplan, base_cfg)
+    new, t_new = _timed_run(eplan, new_cfg)
+    assert new.matches == base.matches, (
+        f"tentpole run diverged: {new.matches} vs baseline {base.matches}"
+    )
+
+    # --- correctness at scale: the sequential reference oracle ------------
+    ref = ref_enumerate(pat, tgt, plan=vplan)
+    assert (base.matches, base.states) == (ref.matches, ref.states), (
+        f"baseline diverged from the oracle: engine=({base.matches}, "
+        f"{base.states}) ref=({ref.matches}, {ref.states})"
+    )
+
+    # both sides run the jitted jnp-math walk (use_pallas off) — there is no
+    # interpret-mode penalty to exempt, so full-size runs assert the gate
+    speedup = t_base / max(t_new, 1e-9)
+    speedup_asserted = not smoke
+    if speedup_asserted:
+        assert speedup >= SPEEDUP_FLOOR, (
+            f"bucketed walk + edge seeding must be >= {SPEEDUP_FLOOR}x the "
+            f"flat-walk vertex-seeded baseline at n_t={n}; measured "
+            f"{speedup:.2f}x ({t_base:.3f}s vs {t_new:.3f}s)"
+        )
+
+    from repro.core.extend import _pad_deg_cap
+    from repro.core.graph import deg_bucket_caps
+
+    caps = deg_bucket_caps(_pad_deg_cap(vplan.csr.deg_cap))
+    payload = dict(
+        n_t=int(n),
+        target_edges=int(tgt.m),
+        pattern_nodes=int(pat.n),
+        pattern_edges=int(pat.m),
+        seed_edge=list(eplan.seed_edge),
+        deg_cap=int(vplan.csr.deg_cap),
+        bucket_caps=list(caps),
+        root_frontier_vertex=vertex_frontier,
+        root_frontier_edge=edge_frontier,
+        frontier_shrink=shrink,
+        matches=int(base.matches),
+        states_vertex=int(base.states),
+        states_edge=int(new.states),
+        flat_wall_s=t_base,
+        bucketed_wall_s=t_new,
+        speedup=speedup,
+        matches_per_sec_flat=base.matches / max(t_base, 1e-9),
+        matches_per_sec_bucketed=new.matches / max(t_new, 1e-9),
+        speedup_asserted=speedup_asserted,
+        ref_verified=True,
+        smoke=smoke,
+    )
+    print(common.csv_row(
+        "hubheavy/flat_vertex", t_base * 1e6 / max(base.states, 1),
+        f"n_t={n};matches={base.matches};states={base.states};"
+        f"wall={t_base:.3f}s",
+    ))
+    print(common.csv_row(
+        "hubheavy/bucketed_edge", t_new * 1e6 / max(new.states, 1),
+        f"n_t={n};matches={new.matches};states={new.states};"
+        f"wall={t_new:.3f}s;frontier={vertex_frontier}->{edge_frontier};"
+        f"speedup={speedup:.2f}x",
+    ))
+    common.save_json("hubheavy", payload)
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", type=int, default=HUB_NT)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"CI-sized run ({SMOKE_NT} nodes): same frontier "
+                    "and identity assertions, speedup reported only")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the JSON payload to PATH "
+                    "(e.g. BENCH_9.json at the repo root)")
+    args = ap.parse_args()
+    n = SMOKE_NT if args.smoke else args.nodes
+
+    out = run(n, workers=args.workers, seed=args.seed, smoke=args.smoke)
+    common.write_json_path(args.json, out)
+    verdict = (
+        f"(asserted >= {SPEEDUP_FLOOR}x)" if out["speedup_asserted"]
+        else "(reported only)"
+    )
+    print(
+        f"\n[hubheavy] n_t={out['n_t']} deg_cap={out['deg_cap']} "
+        f"buckets={out['bucket_caps']}: root frontier "
+        f"{out['root_frontier_vertex']} -> {out['root_frontier_edge']} "
+        f"({out['frontier_shrink']:.1f}x, asserted >= {FRONTIER_FLOOR}x)"
+    )
+    print(
+        f"[hubheavy] {out['matches']} matches (oracle-verified): "
+        f"flat+vertex {out['flat_wall_s']:.2f}s "
+        f"({out['matches_per_sec_flat']:.0f} matches/s) vs bucketed+edge "
+        f"{out['bucketed_wall_s']:.2f}s "
+        f"({out['matches_per_sec_bucketed']:.0f} matches/s) = "
+        f"{out['speedup']:.2f}x {verdict}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

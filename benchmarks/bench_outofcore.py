@@ -101,11 +101,14 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (2048 nodes), same assertions")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the JSON payload to PATH")
     args = ap.parse_args()
     n = 2048 if args.smoke else args.nodes
 
     out = run(n, budget_factor=args.budget_factor, seed=args.seed,
               workers=args.workers)
+    common.write_json_path(args.json, out)
     print(f"[outofcore] {out['n_nodes']} nodes / {out['n_edges']} edges, "
           f"pattern {out['pattern_nodes']} nodes: "
           f"{out['matches']} matches, {out['states']} states "

@@ -101,6 +101,22 @@ def save_json(name: str, payload) -> str:
     return path
 
 
+def write_json_path(path: Optional[str], payload) -> Optional[str]:
+    """Shared ``--json PATH`` writer: persist a benchmark payload (numpy
+    values included) to an explicit path — e.g. a committed ``BENCH_*.json``
+    at the repo root — next to the artifacts/ copy ``save_json`` keeps.
+    No-op on ``None`` so callers can pass the flag through unconditionally.
+    """
+    if path is None:
+        return None
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=_np_default)
+        f.write("\n")
+    return path
+
+
 def _np_default(o):
     if isinstance(o, (np.integer,)):
         return int(o)

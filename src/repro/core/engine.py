@@ -95,6 +95,20 @@ class EngineConfig:
         (`repro.core.session.Enumerator`).
       spill_cap: per-worker spill-ring capacity under the partitioned
         backend; 0 = auto (see :meth:`resolved_spill_cap`).
+      root_seeding: how worker stacks are first populated (DESIGN.md §10):
+        ``"vertex"`` — the classic depth-0 root split over the first order
+        position's domain; ``"edge"`` — enumerate the plan's seed edge
+        class (``plan.seed_edge``, selected by
+        `repro.core.ordering.select_seed_edge`) directly into depth-1
+        entries, shrinking the root frontier by orders of magnitude on
+        hub-heavy targets; ``"auto"`` — ``"edge"`` iff the plan carries a
+        seed edge.  The match set is provably identical — seeding changes
+        traversal order, never results (the conformance suite gates this).
+      csr_walk: CSR driver-segment schedule (DESIGN.md §10): ``"bucketed"``
+        (default) clamps each lane's walk to its row's pow2 degree-bucket
+        cap (`repro.core.graph.deg_bucket_caps`); ``"flat"`` keeps the
+        PR-5 global-``deg_cap`` walk (the benchmark baseline).  Ignored by
+        the dense backends.
     """
 
     n_workers: int = 1
@@ -112,6 +126,8 @@ class EngineConfig:
     store_used: bool = True
     n_partitions: int = 0
     spill_cap: int = 0
+    root_seeding: str = "vertex"
+    csr_walk: str = "bucketed"
 
     def __post_init__(self):
         # "partitioned" is deliberately NOT in STEP_BACKENDS: it is not a
@@ -122,6 +138,15 @@ class EngineConfig:
         if self.step_backend not in valid:
             raise ValueError(
                 f"step_backend={self.step_backend!r}; expected one of {valid}"
+            )
+        if self.root_seeding not in ("vertex", "edge", "auto"):
+            raise ValueError(
+                f"root_seeding={self.root_seeding!r}; expected "
+                "'vertex', 'edge', or 'auto'"
+            )
+        if self.csr_walk not in ("bucketed", "flat"):
+            raise ValueError(
+                f"csr_walk={self.csr_walk!r}; expected 'bucketed' or 'flat'"
             )
 
     def resolved_stack_cap(self, p_pad: int) -> int:
@@ -763,6 +788,53 @@ def _drain_spill(spill: SpillState):
 _PART_MAX_ATTEMPTS = 4
 
 
+def partition_root_entries(plan: SearchPlan, cfg: EngineConfig, pp):
+    """Root pool entries for the partitioned driver, one batch per owning
+    partition (DESIGN.md §10).
+
+    Under vertex seeding each partition gets **one** entry ``(depth=0,
+    map=[-1...], cand=dom[0] ∩ its row range, pending=0)`` — roots are
+    enumerated while their own rows are resident instead of all seeding on
+    the first-visited partition (which spilled nearly every depth-1 child
+    whose parent row lived elsewhere).  Under edge seeding the plan's seed
+    arcs (`repro.core.frontier.root_seed_entries`) become depth-1 entries
+    routed to the partition owning ``map[0]``; they carry no pending
+    parents (position 1's constraints all reference position 0 and are
+    applied host-side at seed build).  Returns ``[(part, (depth, map_row,
+    cand, pending)), ...]`` in deterministic partition/row order.
+    """
+    mode = cfg.root_seeding
+    if mode == "auto":
+        mode = "edge" if plan.seed_edge is not None else "vertex"
+    entries = []
+    if mode == "edge":
+        if plan.seed_edge is None:
+            raise ValueError(
+                "root_seeding='edge' requires a plan built with seed_edge= "
+                "(plan.seed_edge is unset; see repro.core.plan.build_plan)"
+            )
+        sd, sm, sc = frontier.root_seed_entries(plan)
+        for i in range(sd.shape[0]):
+            part = int(
+                np.searchsorted(pp.node_start, int(sm[i, 0]), side="right") - 1
+            )
+            entries.append((part, (int(sd[i]), sm[i].copy(), sc[i].copy(), 0)))
+        return entries
+    if not plan.satisfiable:
+        return entries
+    m0 = np.full(plan.p_pad, -1, dtype=np.int32)
+    for pid in range(pp.n_parts):
+        lo, hi = int(pp.node_start[pid]), int(pp.node_start[pid + 1])
+        if hi <= lo:
+            continue
+        cand = plan.dom_bits[0] & bitmap_from_indices(
+            np.arange(lo, hi), plan.n_t, plan.w
+        )
+        if cand.any():
+            entries.append((pid, (0, m0.copy(), cand, 0)))
+    return entries
+
+
 def run_partitioned(
     plan: SearchPlan,
     cfg: EngineConfig,
@@ -815,10 +887,7 @@ def run_partitioned(
         nonlocal leg_cfg, n_rounds
         for _ in range(_PART_MAX_ATTEMPTS):
             fn = engine_factory(leg_cfg)
-            if seed is None:
-                st = frontier.init_state(plan, leg_cfg)
-            else:
-                st = frontier.init_delta_state(plan, leg_cfg, *seed)
+            st = frontier.init_delta_state(plan, leg_cfg, *seed)
             spill = frontier.init_spill_state(
                 v, leg_cfg.resolved_spill_cap(p_pad), p_pad, w
             )
@@ -880,27 +949,27 @@ def run_partitioned(
         n_spilled += len(staged)
         max_pool = max(max_pool, max((len(p) for p in pools), default=0))
 
-    current = 0
-    roots_done = False
-    while True:
+    # Roots enter through the pools, each batch owned by the partition whose
+    # rows it maps (DESIGN.md §10) — the first leg of every partition extends
+    # against resident parent rows instead of spilling depth-1 children.
+    for part, entry in partition_root_entries(plan, cfg, pp):
+        pools[part].append(entry)
+
+    current = next((pid for pid in range(n_parts) if pools[pid]), None)
+    while current is not None:
         arrays = extend.make_part_plan_arrays(plan, pp, current)
         n_visits += 1
         while True:
-            if not roots_done:
-                seed = None  # first leg: the usual depth-0 root split
-            else:
-                chunk_n = v * max(leg_cfg.resolved_stack_cap(p_pad) // 2, 1)
-                sd, sm, sc, dead = _intake_chunk(plan, pp, current, pools, chunk_n)
-                n_dead += dead
-                if sd.shape[0] == 0:
-                    if pools[current]:
-                        continue  # chunk was all dead/re-routed; keep draining
-                    break  # partition quiescent
-                seed = (sd, sm, sc)
-            st, staged = run_leg(arrays, seed)
+            chunk_n = v * max(leg_cfg.resolved_stack_cap(p_pad) // 2, 1)
+            sd, sm, sc, dead = _intake_chunk(plan, pp, current, pools, chunk_n)
+            n_dead += dead
+            if sd.shape[0] == 0:
+                if pools[current]:
+                    continue  # chunk was all dead/re-routed; keep draining
+                break  # partition quiescent
+            st, staged = run_leg(arrays, (sd, sm, sc))
             absorb(st, staged)
             n_legs += 1
-            roots_done = True
         nxt = None
         if mesh is not None:  # round-robin partition rotation under a mesh
             for off in range(1, n_parts + 1):

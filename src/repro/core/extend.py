@@ -62,6 +62,7 @@ from repro.core.graph import (
     PartitionedPlanes,
     bitmap_from_indices,
     csr_planes_from_bitmaps,
+    deg_bucket_caps,
     partition_csr_planes,
 )
 from repro.core.plan import SearchPlan
@@ -373,18 +374,18 @@ def plan_partitions_budget(plan: SearchPlan, max_bytes: int) -> PartitionedPlane
     return pp
 
 
-def partitioned_shape_bucket(plan: SearchPlan, n_parts: int) -> Tuple[int, int, int, int]:
-    """``(n_parts, max_loc_pad, nnz_pad, deg_cap_pad)`` — the partition
+def partitioned_shape_bucket(plan: SearchPlan, n_parts: int) -> Tuple[int, ...]:
+    """``(n_parts, max_loc_pad, nnz_pad, *bucket_caps)`` — the partition
     identity the session folds into compile-cache and coalesce keys: two
     queries share a compiled partitioned engine iff these (plus the usual
-    bucket) agree."""
+    bucket) agree.  As in :func:`csr_shape_bucket`, the trailing entries are
+    the pow2 degree-bucket ladder rather than one global ``deg_cap``."""
     pp = plan_partitions(plan, n_parts)
     return (
         pp.n_parts,
         _pad_rows(pp.max_local),
         _pad_nnz(pp.max_nnz),
-        _pad_deg_cap(pp.deg_cap),
-    )
+    ) + deg_bucket_caps(_pad_deg_cap(pp.deg_cap))
 
 
 def part_resident_nbytes(pp: PartitionedPlanes) -> int:
@@ -495,12 +496,17 @@ def plan_arrays_for(cfg: "EngineConfig", plan: SearchPlan,
     return make_plan_arrays(plan, adj_bits=adj_bits)
 
 
-def csr_shape_bucket(plan: SearchPlan) -> Tuple[int, int]:
-    """``(deg_cap, nnz)`` padded shape bucket of a plan's CSR arrays — the
-    extra pack-grouping key the session needs under the csr backend: two
+def csr_shape_bucket(plan: SearchPlan) -> Tuple[int, ...]:
+    """``(nnz, *bucket_caps)`` padded shape bucket of a plan's CSR arrays —
+    the extra pack-grouping key the session needs under the csr backend: two
     same-``(n_t, w)`` targets of different density have differently shaped
-    :class:`CsrPlanArrays` and cannot share a vmapped pack lane."""
-    return (_pad_deg_cap(_plan_csr(plan).deg_cap), _pad_nnz(_plan_csr(plan).nnz))
+    :class:`CsrPlanArrays` and cannot share a vmapped pack lane.  The former
+    scalar ``deg_cap`` entry is now the full pow2 degree-bucket ladder
+    (`repro.core.graph.deg_bucket_caps`, DESIGN.md §10): the bucketed walk's
+    trip count is derived from the ladder, so targets agreeing on it share a
+    compiled engine even when their raw max degrees differ."""
+    cp = _plan_csr(plan)
+    return (_pad_nnz(cp.nnz),) + deg_bucket_caps(_pad_deg_cap(cp.deg_cap))
 
 
 def plan_partition_specs_for(cfg: "EngineConfig", n_t: int, csr_only: bool = False):
@@ -786,16 +792,23 @@ class CsrStepBackend:
         self.n_t = plan.indptr.shape[1] - 1
         self.deg_cap = plan.seg_iota.shape[0]
         self.use_kernel = cfg.use_pallas
+        bucketed = cfg.csr_walk == "bucketed"
         if self.use_kernel:
             from repro.kernels import ops as kops
 
-            self._step = functools.partial(kops.csr_extend, deg_cap=self.deg_cap)
+            if bucketed:
+                self._step = functools.partial(
+                    kops.csr_extend_bucketed, deg_cap=self.deg_cap
+                )
+            else:
+                self._step = functools.partial(kops.csr_extend, deg_cap=self.deg_cap)
         else:
             from repro.kernels import ref as kref
 
-            self._step = jax.jit(
-                functools.partial(kref.csr_extend_ref, deg_cap=self.deg_cap)
+            step_ref = (
+                kref.csr_extend_bucketed_ref if bucketed else kref.csr_extend_ref
             )
+            self._step = jax.jit(functools.partial(step_ref, deg_cap=self.deg_cap))
 
     def _segments(self, pos: jnp.ndarray, map2: jnp.ndarray):
         """Per-lane CSR segment bounds for the child position's parents:

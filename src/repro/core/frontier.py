@@ -19,7 +19,7 @@ paths (DESIGN.md §2.4).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple, TYPE_CHECKING
+from typing import NamedTuple, Optional, Tuple, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -233,8 +233,106 @@ def overflowed(size: jnp.ndarray, s_cap: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def init_state(plan: SearchPlan, cfg: "EngineConfig") -> EngineState:
-    """Initial work distribution (paper §3.3): depth-0 candidates are split
-    into equal contiguous target-node ranges, one root entry per worker."""
+    """Initial work distribution, dispatched on ``cfg.root_seeding``
+    (DESIGN.md §10).
+
+    ``"vertex"`` is the paper's §3.3 scheme — depth-0 candidates split into
+    equal contiguous target-node ranges, one root entry per worker.
+    ``"edge"`` enumerates the plan's seed edge class into depth-1 entries
+    (:func:`root_seed_entries`) dealt round-robin across workers — the
+    HiPerMotif-style injection that shrinks hub-heavy root frontiers by
+    orders of magnitude; when the class is too populous for the stacks, it
+    falls back to a depth-0 split restricted to the qualifying source
+    nodes (a sound pruning — deterministic per ``(plan, cfg)``, so
+    counters agree across step backends).  ``"auto"`` is ``"edge"`` iff
+    the plan carries a seed edge.  Every execution path — ``engine.run``,
+    ``run_sharded``, and the session — seeds through this one function,
+    and the match set is identical in all modes.
+    """
+    mode = cfg.root_seeding
+    if mode == "auto":
+        mode = "edge" if plan.seed_edge is not None else "vertex"
+    if mode == "edge":
+        if plan.seed_edge is None:
+            raise ValueError(
+                "root_seeding='edge' requires a plan built with seed_edge= "
+                "(plan.seed_edge is unset; see repro.core.plan.build_plan)"
+            )
+        sd, sm, sc = root_seed_entries(plan)
+        v = cfg.n_workers
+        s_cap = cfg.resolved_stack_cap(plan.p_pad)
+        k = int(sd.shape[0])
+        per_worker = -(-k // v) if k else 0
+        if per_worker <= s_cap - 1:
+            return init_delta_state(plan, cfg, sd, sm, sc)
+        mask = bitmap_from_indices(
+            sm[:, 0].astype(np.int64), plan.n_t, plan.w
+        )
+        return _init_vertex_state(plan, cfg, root_mask=mask)
+    return _init_vertex_state(plan, cfg)
+
+
+def root_seed_entries(plan: SearchPlan):
+    """Depth-1 engine seeds for edge-centric root seeding (DESIGN.md §10).
+
+    The seed edge's endpoints hold ordering positions 0/1, so each target
+    arc of the seed class becomes one partial embedding: map position 0 to
+    the arc's source ``t`` and store position 1's candidate bitmap
+    (`repro.core.extend.host_cand_bitmap` — engine-valid, candidates are
+    trusted downstream, exactly the PR-7 delta-seed contract).  Sources are
+    drawn from ``dom[0]`` restricted to rows with a non-empty segment in
+    the seed constraint's plane, so the work is proportional to the *rare
+    class*, not the target.  Returns ``(seed_depth [K], seed_map [K,
+    p_pad], seed_cand [K, w])`` sorted by source node — deterministic and
+    backend-independent, which is what keeps per-backend counters identical
+    under edge seeding.
+    """
+    from repro.core.extend import _plan_csr, host_cand_bitmap
+
+    p_pad, w = plan.p_pad, plan.w
+    empty = (
+        np.zeros((0,), np.int32),
+        np.zeros((0, p_pad), np.int32),
+        np.zeros((0, w), np.uint32),
+    )
+    if not plan.satisfiable or plan.n_p < 2:
+        return empty
+
+    from repro.core.graph import bitmap_to_indices
+
+    dom0_idx = bitmap_to_indices(plan.dom_bits[0])
+    # the position-1 parent slot referencing position 0 IS the seed edge
+    j0 = next(
+        (j for j in range(plan.max_parents) if int(plan.parent_pos[1, j]) == 0),
+        None,
+    )
+    if j0 is not None:
+        plane = int(plan.parent_elab[1, j0]) * 2 + int(plan.parent_dir[1, j0])
+        ptr = _plan_csr(plan).indptr[plane].astype(np.int64)
+        lens = ptr[dom0_idx + 1] - ptr[dom0_idx]
+        dom0_idx = dom0_idx[lens > 0]
+    seeds_m, seeds_c = [], []
+    m = np.full(p_pad, -1, dtype=np.int32)
+    for t in dom0_idx.tolist():
+        m[0] = t
+        c1 = host_cand_bitmap(plan, 1, m)
+        if c1.any():
+            seeds_m.append(m.copy())
+            seeds_c.append(c1)
+    if not seeds_m:
+        return empty
+    return (
+        np.ones(len(seeds_m), dtype=np.int32),
+        np.stack(seeds_m).astype(np.int32),
+        np.stack(seeds_c).astype(np.uint32),
+    )
+
+
+def _init_vertex_state(
+    plan: SearchPlan, cfg: "EngineConfig", root_mask: Optional[np.ndarray] = None
+) -> EngineState:
+    """The classic depth-0 root split; ``root_mask`` optionally restricts
+    the root candidates (edge seeding's capacity fallback)."""
     v = cfg.n_workers
     p_pad, w = plan.p_pad, plan.w
     s_cap = cfg.resolved_stack_cap(p_pad)
@@ -246,6 +344,8 @@ def init_state(plan: SearchPlan, cfg: "EngineConfig") -> EngineState:
         idx = np.arange(splits[kk], splits[kk + 1])
         if idx.size:
             root_cands[kk] = bitmap_from_indices(idx, plan.n_t, w) & plan.dom_bits[0]
+    if root_mask is not None:
+        root_cands &= root_mask[None, :]
     if not plan.satisfiable:
         root_cands[:] = 0
 

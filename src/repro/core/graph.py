@@ -588,6 +588,33 @@ def csr_planes_from_bitmaps(adj_bits: np.ndarray) -> CsrPlanes:
 
 
 # ---------------------------------------------------------------------------
+# degree buckets (hub-aware CSR walk, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def deg_bucket_caps(deg_cap: int, base: int = 8) -> Tuple[int, ...]:
+    """Pow2 ladder of per-bucket degree caps covering rows up to ``deg_cap``.
+
+    Bucket ``i`` holds rows with length ≤ ``caps[i]`` (and > ``caps[i-1]``):
+    ``(base, 2·base, 4·base, …)`` until the last cap reaches ``deg_cap``.
+    On power-law targets almost every row lands in the first bucket, so a
+    walk clamped to the row's bucket cap does ``O(base)`` work per tail
+    lane instead of the global hub-sized ``deg_cap``.
+    """
+    base = max(1, base)
+    caps = [base]
+    while caps[-1] < deg_cap:
+        caps.append(caps[-1] * 2)
+    return tuple(caps)
+
+
+def deg_bucket_index(deg: np.ndarray, caps: Sequence[int]) -> np.ndarray:
+    """Bucket index per row length (``deg == 0`` maps to bucket 0)."""
+    caps = np.asarray(caps, dtype=np.int64)
+    return np.searchsorted(caps, np.maximum(np.asarray(deg, dtype=np.int64), 1),
+                           side="left").astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
 # bitmap helpers (host side)
 # ---------------------------------------------------------------------------
 

@@ -32,7 +32,9 @@ import numpy as np
 
 from repro.core import domains as dom_mod
 from repro.core import ordering as ord_mod
-from repro.core.graph import CsrPlanes, Graph, PackedGraph, n_words, popcount
+from repro.core.graph import (
+    CsrPlanes, Graph, PackedGraph, csr_planes_from_bitmaps, n_words, popcount,
+)
 
 VARIANTS = ("ri", "ri-ds", "ri-ds-si", "ri-ds-si-fc", "ri-ds-si-acfc")
 
@@ -92,6 +94,12 @@ class SearchPlan:
     domains: Optional[dom_mod.DomainResult] = dataclasses.field(
         default=None, compare=False, repr=False
     )
+    # Edge-centric seeding (DESIGN.md §10): the pattern edge ``(u, v, elab)``
+    # whose endpoints occupy ordering positions 0/1, selected by
+    # ``repro.core.ordering.select_seed_edge`` (or forced explicitly).  When
+    # set, ``EngineConfig.root_seeding="edge"|"auto"`` enumerates this edge
+    # class's target arcs directly into depth-1 root entries.
+    seed_edge: Optional[Tuple[int, int, int]] = None
 
     @property
     def max_parents(self) -> int:
@@ -115,6 +123,7 @@ def build_plan(
     domains: Optional[dom_mod.DomainResult] = None,
     anchor: Optional[Tuple[int, ...]] = None,
     csr_factory: Optional[Callable[[], CsrPlanes]] = None,
+    seed_edge=None,
 ) -> SearchPlan:
     """Run preprocessing (domains + ordering) and emit a :class:`SearchPlan`.
 
@@ -128,9 +137,23 @@ def build_plan(
     ``(pa, pb)`` passes ``(pa, pb)`` so seeds can pin positions 0/1 onto an
     inserted target edge.  Domains are ordering-independent, so one
     ``DomainResult`` is shared across all anchor plans of a query.
+
+    ``seed_edge`` enables edge-centric seeding (DESIGN.md §10): ``"auto"``
+    picks the rarest target edge class via
+    `repro.core.ordering.select_seed_edge` (over ``csr_factory``'s planes
+    when given, else planes derived from the dense bitmaps); an explicit
+    ``(u, v, elab)`` pattern-edge triple forces the choice.  The winning
+    edge's endpoints are anchored to ordering positions 0/1 and recorded on
+    ``SearchPlan.seed_edge``.  Mutually exclusive with ``anchor``.
     """
     flags = variant_flags(variant)
     use_ds, use_si = flags["use_ac"], flags["use_si"]
+
+    seed = _resolve_seed_edge(
+        pattern, seed_edge,
+        csr_factory if csr_factory is not None
+        else (lambda: csr_planes_from_bitmaps(target.adj_bits)),
+    )
 
     # --- domains ---------------------------------------------------------
     if domains is not None:
@@ -148,7 +171,7 @@ def build_plan(
     return _assemble_plan(
         pattern, dres, variant, use_ds, use_si, p_pad, max_parents,
         n_t=target.n, w=target.w, adj_bits=target.adj_bits, csr=None,
-        anchor=anchor, csr_factory=csr_factory,
+        anchor=anchor, csr_factory=csr_factory, seed_edge=seed,
     )
 
 
@@ -160,6 +183,7 @@ def build_csr_plan(
     max_parents: Optional[int] = None,
     w: Optional[int] = None,
     anchor: Optional[Tuple[int, ...]] = None,
+    seed_edge=None,
 ) -> SearchPlan:
     """Build a **CSR-only** :class:`SearchPlan` straight from a host
     :class:`Graph` — the dense ``[n_elab, 2, n_t, w]`` adjacency bitmaps are
@@ -180,14 +204,36 @@ def build_csr_plan(
     w = w or n_words(target.n)
     dres = dom_mod.compute_domains_sparse(pattern, target, w)
     n_elab = target.n_edge_labels
+    planes = target.csr_planes(n_elab)
+    seed = _resolve_seed_edge(pattern, seed_edge, lambda: planes)
     return _assemble_plan(
         pattern, dres, variant, use_ds=False, use_si=False,
         p_pad=p_pad, max_parents=max_parents,
         n_t=target.n, w=w,
         adj_bits=np.zeros((n_elab, 2, 0, w), dtype=np.uint32),
-        csr=target.csr_planes(n_elab),
-        anchor=anchor,
+        csr=planes,
+        anchor=anchor, seed_edge=seed,
     )
+
+
+def _resolve_seed_edge(pattern: Graph, seed_edge, planes_factory):
+    """Normalize a ``seed_edge=`` argument to a validated ``(u, v, elab)``
+    pattern-edge triple (or ``None``): ``"auto"`` consults
+    `repro.core.ordering.select_seed_edge` over the factory's planes; an
+    explicit triple must name an existing non-self-loop pattern edge."""
+    if seed_edge is None:
+        return None
+    if seed_edge == "auto":
+        return ord_mod.select_seed_edge(pattern, planes_factory())
+    u, v, lab = (int(x) for x in seed_edge)
+    if u == v:
+        raise ValueError(f"seed_edge {(u, v, lab)} is a self-loop")
+    hit = np.any(
+        (pattern.src == u) & (pattern.dst == v) & (pattern.edge_labels == lab)
+    )
+    if not hit:
+        raise ValueError(f"seed_edge {(u, v, lab)} is not a pattern edge")
+    return (u, v, lab)
 
 
 def _assemble_plan(
@@ -204,10 +250,18 @@ def _assemble_plan(
     csr: Optional[CsrPlanes],
     anchor: Optional[Tuple[int, ...]] = None,
     csr_factory: Optional[Callable[[], CsrPlanes]] = None,
+    seed_edge: Optional[Tuple[int, int, int]] = None,
 ) -> SearchPlan:
     """Ordering + padded-array assembly shared by :func:`build_plan` and
     :func:`build_csr_plan`."""
     dom_sizes = popcount(dres.bits)
+
+    # Edge seeding rides the delta-anchor machinery: the seed edge's
+    # endpoints become the forced ordering prefix (positions 0/1).
+    if seed_edge is not None:
+        if anchor is not None:
+            raise ValueError("anchor= and seed_edge= are mutually exclusive")
+        anchor = (seed_edge[0], seed_edge[1])
 
     # --- ordering ----------------------------------------------------------
     # RI ignores domains when ordering; RI-DS places singletons first (but its
@@ -268,4 +322,5 @@ def _assemble_plan(
         csr=csr,
         csr_factory=csr_factory,
         domains=dres,
+        seed_edge=seed_edge,
     )

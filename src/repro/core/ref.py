@@ -260,14 +260,19 @@ def ref_enumerate_partitioned(
             else:
                 expand(cpos, m2, cand2)
 
-    cur = 0
-    roots_done = False
-    while True:
+    # Roots prefill the pools per owning partition (DESIGN.md §10), exactly
+    # mirroring engine.partition_root_entries — depth-0 children extend while
+    # their parent rows are resident instead of spilling from partition 0.
+    for pid in range(pp.n_parts):
+        plo, phi = int(node_start[pid]), int(node_start[pid + 1])
+        rcand = {t for t in dom[0] if plo <= t < phi}
+        if rcand:
+            pools[pid].append((0, [], rcand, ()))
+
+    cur = next((pid for pid in range(pp.n_parts) if pools[pid]), None)
+    while cur is not None:
         lo, hi = int(node_start[cur]), int(node_start[cur + 1])
         out.visits += 1
-        if not roots_done:
-            roots_done = True
-            expand(0, [], set(dom[0]))
         while pools[cur]:
             pos, m2, cand2, pend = pools[cur].pop()
             npend: List[int] = []

@@ -424,8 +424,16 @@ def prepare_query(
     name: Optional[str] = None,
     p_pad: Optional[int] = None,
     max_parents: Optional[int] = None,
+    seed_edge=None,
 ) -> Query:
-    """Compile ``pattern`` against ``index`` into a bucketed :class:`Query`."""
+    """Compile ``pattern`` against ``index`` into a bucketed :class:`Query`.
+
+    ``seed_edge`` (``"auto"`` or an explicit ``(u, v, elab)`` pattern-edge
+    triple) enables edge-centric root seeding (DESIGN.md §10): the plan
+    anchors the edge's endpoints at positions 0/1 so engines with
+    ``root_seeding="edge"``/``"auto"`` can seed from the rare target edge
+    class.  Selection reuses the index's cached CSR planes.
+    """
     index = SubgraphIndex.build(index)
     t0 = time.perf_counter()
     plan = build_plan(
@@ -435,6 +443,7 @@ def prepare_query(
         p_pad=p_pad if p_pad is not None else snap_p_pad(pattern.n),
         max_parents=max_parents if max_parents is not None else DEFAULT_MAX_PARENTS,
         csr_factory=index.csr_planes,
+        seed_edge=seed_edge,
     )
     return Query(
         pattern=pattern,
@@ -766,15 +775,22 @@ class Enumerator:
         variant: Optional[str] = None,
         name: Optional[str] = None,
         index: Union[SubgraphIndex, Graph, PackedGraph, None] = None,
+        seed_edge=None,
     ) -> Query:
-        """Compile a pattern into a bucketed :class:`Query` for this session."""
+        """Compile a pattern into a bucketed :class:`Query` for this session.
+
+        ``seed_edge`` is forwarded to :func:`prepare_query` (edge-centric
+        seeding, DESIGN.md §10)."""
         idx = index if index is not None else self.index
         if idx is None:
             raise ValueError(
                 "Enumerator has no default SubgraphIndex; pass index= to "
                 "prepare() or construct Enumerator(index, ...)"
             )
-        return prepare_query(pattern, idx, variant=variant or self.variant, name=name)
+        return prepare_query(
+            pattern, idx, variant=variant or self.variant, name=name,
+            seed_edge=seed_edge,
+        )
 
     def prepare_batch(
         self,

@@ -213,3 +213,191 @@ def csr_extend(
         indices.reshape(1, n_pad),
     )
     return cand2[:, :w], child[:, :w], meta
+
+
+def _kernel_bucketed(
+    cpos_ref, sst_ref, sln_ref, depth_ref, np_ref,  # scalar prefetch
+    cand_ref, used_ref, dom_ref, ind_ref,  # operands
+    cand2_ref, child_ref, meta_ref,  # outputs
+    *, mp: int, deg_cap: int, chunk: int,
+):
+    """Degree-bucketed walk (DESIGN.md §10): the driver segment is consumed
+    in ``chunk``-wide ``pl.ds`` loads, ``fori_loop``-bounded by the lane's
+    pow2 degree-bucket cap instead of the global ``deg_cap``, and parent
+    membership is a branchless binary search on the flat ``indices`` block
+    at prefetched per-parent bounds — no ``deg_cap``-wide segment loads."""
+    l = pl.program_id(0)
+    wp = cand_ref.shape[1]
+    n_pad = ind_ref.shape[1]
+
+    c = cand_ref[...]
+    valid, v, vmask = _lowest_bit(c)
+    cand2_ref[...] = c ^ vmask
+    base = dom_ref[...] & ~used_ref[...] & ~vmask  # [1, wp]
+
+    # --- driver segment + its pow2 bucket cap -----------------------------
+    lens = sln_ref[l, :]  # [mp] from SMEM
+    real = lens >= 0
+    has_parent = jnp.any(real)
+    d = jnp.argmax(real)
+    d_start = sst_ref[l, d]
+    d_len = jnp.where(has_parent, lens[d], 0)
+    m = jnp.maximum(d_len, 1) - 1
+    for shift in (1, 2, 4, 8, 16):
+        m = m | (m >> shift)
+    bcap = jnp.minimum(jnp.maximum(m + 1, chunk), deg_cap)
+    trips = (bcap + chunk - 1) // chunk
+
+    ind = ind_ref[0, :]  # [n_pad] block value for searched gathers
+    lo0 = sst_ref[l, :]
+    hi0 = lo0 + jnp.maximum(lens, 0)
+    search_iters = max(1, deg_cap).bit_length() + 1
+    offs_c = lax.iota(jnp.int32, chunk)
+
+    def member(j, carry):
+        u, ok = carry
+        lo = jnp.full((chunk,), lo0[j], jnp.int32)
+        hi = jnp.full((chunk,), hi0[j], jnp.int32)
+
+        def step(_, lh):
+            lo, hi = lh
+            pred = lo < hi
+            mid = (lo + hi) >> 1
+            val = jnp.take(ind, jnp.clip(mid, 0, n_pad - 1))
+            go = pred & (val < u)
+            return jnp.where(go, mid + 1, lo), jnp.where(pred & ~go, mid, hi)
+
+        lo, _ = lax.fori_loop(0, search_iters, step, (lo, hi))
+        hit = (lo < hi0[j]) & (jnp.take(ind, jnp.clip(lo, 0, n_pad - 1)) == u)
+        skip = jnp.logical_not(real[j]) | (j == d)
+        return u, ok & (skip | hit)
+
+    def trip(i, carry):
+        prev, walked = carry
+        u = ind_ref[0, pl.ds(d_start + i * chunk, chunk)]  # [chunk]
+        k_on = (i * chunk + offs_c) < d_len
+        left = jnp.concatenate([prev.reshape(1), u[:-1]])
+        ok = k_on & (u != left)  # rows are deduped; boundary-safe defense
+        rem = jnp.clip(d_len - i * chunk, 0, chunk)
+        last = jnp.take(u, jnp.maximum(rem - 1, 0))
+        prev2 = jnp.where(rem > 0, last, prev)
+
+        u_c = jnp.clip(u, 0, wp * 32 - 1)
+        word = u_c // 32
+        bit = (u_c % 32).astype(jnp.uint32)
+        in_base = (jnp.take(base[0], word) >> bit) & jnp.uint32(1)
+        ok = ok & (in_base != 0)
+        _, ok = lax.fori_loop(0, mp, member, (u, ok))
+        bits = jnp.where(ok, jnp.uint32(1) << bit, jnp.uint32(0))
+        w_scatter = jnp.where(ok, word, wp)  # out-of-range ⇒ dropped
+        walked = walked.at[w_scatter].add(bits, mode="drop")
+        return prev2, walked
+
+    _, walked = lax.fori_loop(
+        0, trips, trip, (jnp.int32(-1), jnp.zeros((wp,), jnp.uint32))
+    )
+    child = jnp.where(has_parent, walked[None, :], base)
+
+    depth = depth_ref[l]
+    n_p = np_ref[0]
+    is_match = valid & (depth + 1 >= n_p)
+    want_child = valid & jnp.logical_not(is_match)
+    child = jnp.where(want_child, child, jnp.uint32(0))
+    child_ref[...] = child
+    has_child = want_child & jnp.any(child != jnp.uint32(0))
+    meta_ref[...] = jnp.stack(
+        [
+            valid.astype(jnp.int32),
+            jnp.where(valid, v, -1),
+            is_match.astype(jnp.int32),
+            has_child.astype(jnp.int32),
+        ]
+    ).reshape(1, META_WIDTH)
+
+
+@functools.partial(jax.jit, static_argnames=("deg_cap", "chunk", "interpret"))
+def csr_extend_bucketed(
+    indices: jnp.ndarray,  # [nnz_pad + deg_cap] int32 flat CSR columns
+    dom_bits: jnp.ndarray,  # [p_pad, w] uint32
+    seg_start: jnp.ndarray,  # [b, mp] int32 global segment offsets
+    seg_len: jnp.ndarray,  # [b, mp] int32 (-1 on unused parent slots)
+    child_pos: jnp.ndarray,  # [b] int32 order position of the child
+    depth: jnp.ndarray,  # [b] int32 depth of the popped entry
+    n_p: jnp.ndarray,  # scalar int32 actual pattern size
+    used: jnp.ndarray,  # [b, w] uint32
+    cand: jnp.ndarray,  # [b, w] uint32
+    deg_cap: int = 8,
+    chunk: int = 8,
+    interpret: bool = True,
+):
+    """Bucketed sparse fused expansion over ``b`` lanes (DESIGN.md §10).
+
+    Identical contract and results to :func:`csr_extend`; only the walk
+    schedule differs — each lane visits its driver segment at the row's
+    pow2 degree-bucket width, so tail rows cost ``O(chunk)`` instead of the
+    global hub-sized ``deg_cap``.  Oracle:
+    `repro.kernels.ref.csr_extend_bucketed_ref`.
+    """
+    b, w = cand.shape
+    mp = seg_len.shape[1]
+    if mp == 0:  # degenerate plans: keep one neutral (unused) parent slot
+        seg_start = jnp.zeros((b, 1), jnp.int32)
+        seg_len = jnp.full((b, 1), -1, jnp.int32)
+        mp = 1
+    wp = pad_words(w)
+    if wp != w:
+        padw = ((0, 0), (0, wp - w))
+        dom_bits = jnp.pad(dom_bits, padw)
+        used = jnp.pad(used, padw)
+        cand = jnp.pad(cand, padw)
+    n_ind = indices.shape[0]
+    n_pad = pad_words(n_ind)
+    if n_pad != n_ind:
+        indices = jnp.pad(indices, (0, n_pad - n_ind), constant_values=SENTINEL)
+
+    grid = (b,)
+
+    def lane_map(l, cpos_s, sst_s, sln_s, depth_s, np_s):
+        return (l, 0)
+
+    def dom_map(l, cpos_s, sst_s, sln_s, depth_s, np_s):
+        return (cpos_s[l], 0)
+
+    def ind_map(l, cpos_s, sst_s, sln_s, depth_s, np_s):
+        return (0, 0)
+
+    cand2, child, meta = pl.pallas_call(
+        functools.partial(_kernel_bucketed, mp=mp, deg_cap=deg_cap, chunk=chunk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, wp), lane_map),  # cand
+                pl.BlockSpec((1, wp), lane_map),  # used
+                pl.BlockSpec((1, wp), dom_map),  # dom_bits
+                pl.BlockSpec((1, n_pad), ind_map),  # flat CSR indices
+            ],
+            out_specs=[
+                pl.BlockSpec((1, wp), lane_map),  # cand2
+                pl.BlockSpec((1, wp), lane_map),  # child_cand
+                pl.BlockSpec((1, META_WIDTH), lane_map),  # meta
+            ],
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((b, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((b, META_WIDTH), jnp.int32),
+        ),
+        interpret=interpret,
+    )(
+        child_pos.astype(jnp.int32),
+        seg_start.astype(jnp.int32),
+        seg_len.astype(jnp.int32),
+        depth.astype(jnp.int32),
+        jnp.asarray(n_p, jnp.int32).reshape((1,)),
+        cand,
+        used,
+        dom_bits,
+        indices.reshape(1, n_pad),
+    )
+    return cand2[:, :w], child[:, :w], meta

@@ -68,6 +68,17 @@ def csr_extend(indices, dom_bits, seg_start, seg_len, child_pos, depth, n_p,
     )
 
 
+def csr_extend_bucketed(indices, dom_bits, seg_start, seg_len, child_pos, depth,
+                        n_p, used, cand, deg_cap=8, chunk=8, interpret=None):
+    """See `repro.kernels.csr_extend.csr_extend_bucketed` (the degree-bucketed
+    sparse engine step, DESIGN.md §10)."""
+    return _ce.csr_extend_bucketed(
+        indices, dom_bits, seg_start, seg_len, child_pos, depth, n_p,
+        used, cand, deg_cap=deg_cap, chunk=chunk,
+        interpret=resolve_interpret(interpret),
+    )
+
+
 def adjacency_any(rows, mask, interpret=None):
     """See `repro.kernels.domain_ac.adjacency_any`."""
     return _ac.adjacency_any(rows, mask, interpret=resolve_interpret(interpret))

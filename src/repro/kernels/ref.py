@@ -186,6 +186,139 @@ def csr_extend_ref(
     return cand2, child, meta
 
 
+def csr_extend_bucketed_ref(
+    indices: jnp.ndarray,  # [nnz_pad + deg_cap] int32 flat CSR columns
+    dom_bits: jnp.ndarray,  # [p_pad, w] uint32
+    seg_start: jnp.ndarray,  # [b, mp] int32 segment offsets into ``indices``
+    seg_len: jnp.ndarray,  # [b, mp] int32 (-1 on unused parent slots)
+    child_pos: jnp.ndarray,  # [b] int32 order position of the child
+    depth: jnp.ndarray,  # [b] int32 depth of the popped entry
+    n_p: jnp.ndarray,  # scalar int32 actual pattern size
+    used: jnp.ndarray,  # [b, w] uint32
+    cand: jnp.ndarray,  # [b, w] uint32
+    *,
+    deg_cap: int,
+    chunk: int = 8,
+):
+    """Degree-bucketed variant of :func:`csr_extend_ref` (DESIGN.md §10).
+
+    Same contract, same results.  Two changes to the walk make hub-heavy
+    targets cheap:
+
+    * the driver segment is consumed in ``chunk``-wide trips, and each lane
+      stops at its **pow2 degree-bucket cap** (`repro.core.graph
+      .deg_bucket_caps`) instead of the global hub-sized ``deg_cap`` — a
+      batch of tail rows does ``O(chunk)`` work per lane, and the
+      ``while_loop`` bound is the *batch* maximum, so a hub lane only slows
+      its own batch;
+    * membership in the other parents' segments is a branchless
+      lower-bound **binary search on the flat ``indices`` array** with
+      dynamic per-parent bounds — no ``deg_cap``-wide segment gathers at
+      all.
+    """
+    b, w = cand.shape
+    mp = seg_len.shape[1]
+    n_idx = indices.shape[0]
+
+    # --- lowest-bit extraction (identical to csr_extend_ref) ---------------
+    nz = cand != 0
+    valid = jnp.any(nz, axis=-1)
+    widx = jnp.argmax(nz, axis=-1)
+    word0 = jnp.take_along_axis(cand, widx[:, None], axis=-1)[:, 0]
+    tz = lax.population_count(~word0 & (word0 - jnp.uint32(1)))
+    v = widx.astype(jnp.int32) * 32 + tz.astype(jnp.int32)
+    lowbit = word0 & (~word0 + jnp.uint32(1))
+    sel = (jnp.arange(w)[None, :] == widx[:, None]) & valid[:, None]
+    vmask = jnp.where(sel, lowbit[:, None], jnp.uint32(0))
+    cand2 = cand ^ vmask
+
+    base = dom_bits[child_pos] & ~used & ~vmask  # [b, w]
+
+    # --- bucketed driver walk ----------------------------------------------
+    real = seg_len >= 0
+    has_parent = jnp.any(real, axis=1)
+    d = jnp.argmax(real, axis=1)
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    d_start = seg_start[bidx, d]
+    d_len = jnp.where(has_parent, seg_len[bidx, d], 0)
+
+    # per-lane pow2 bucket cap: smallest ladder cap >= d_len, clamped so
+    # trips * chunk never exceeds the over-padded deg_cap gather region
+    m = jnp.maximum(d_len, 1) - 1
+    for shift in (1, 2, 4, 8, 16):
+        m = m | (m >> shift)
+    bcap = jnp.minimum(jnp.maximum(m + 1, chunk), deg_cap)
+    trips = (bcap + chunk - 1) // chunk  # [b]
+    n_trips = jnp.max(trips)
+
+    offs_c = jnp.arange(chunk, dtype=jnp.int32)[None, :]  # [1, chunk]
+    lo0 = seg_start  # [b, mp] global flat offsets
+    hi0 = lo0 + jnp.maximum(seg_len, 0)
+    search_iters = max(1, deg_cap).bit_length() + 1
+
+    def member(j, carry):
+        u, ok = carry
+        lo = jnp.broadcast_to(lo0[:, j][:, None], u.shape)
+        hi = jnp.broadcast_to(hi0[:, j][:, None], u.shape)
+
+        def step(_, lh):
+            lo, hi = lh
+            pred = lo < hi
+            mid = (lo + hi) >> 1
+            val = indices[jnp.clip(mid, 0, n_idx - 1)]
+            go = pred & (val < u)
+            return jnp.where(go, mid + 1, lo), jnp.where(pred & ~go, mid, hi)
+
+        lo, _ = lax.fori_loop(0, search_iters, step, (lo, hi))
+        hit = (lo < hi0[:, j][:, None]) & (indices[jnp.clip(lo, 0, n_idx - 1)] == u)
+        skip = (~real[:, j]) | (j == d)
+        return u, ok & (skip[:, None] | hit)
+
+    def trip(state):
+        i, prev, walked = state
+        u = indices[d_start[:, None] + i * chunk + offs_c]  # [b, chunk]
+        k_on = (i * chunk + offs_c) < d_len[:, None]
+        left = jnp.concatenate([prev[:, None], u[:, :-1]], axis=1)
+        ok = k_on & (u != left)  # rows are deduped; boundary-safe defense
+        rem = jnp.clip(d_len - i * chunk, 0, chunk)
+        last = jnp.take_along_axis(u, jnp.maximum(rem - 1, 0)[:, None], axis=1)[:, 0]
+        prev2 = jnp.where(rem > 0, last, prev)
+
+        u_c = jnp.clip(u, 0, w * 32 - 1)
+        word = u_c // 32
+        bit = (u_c % 32).astype(jnp.uint32)
+        in_base = (jnp.take_along_axis(base, word, axis=1) >> bit) & jnp.uint32(1)
+        ok = ok & (in_base != 0)
+        _, ok = lax.fori_loop(0, mp, member, (u, ok))
+        bits = jnp.where(ok, jnp.uint32(1) << bit, jnp.uint32(0))
+        w_scatter = jnp.where(ok, word, w)  # out-of-range ⇒ dropped
+        walked = walked.at[bidx[:, None], w_scatter].add(bits, mode="drop")
+        return i + 1, prev2, walked
+
+    _, _, walked = lax.while_loop(
+        lambda s: s[0] < n_trips,
+        trip,
+        (jnp.int32(0), jnp.full((b,), -1, jnp.int32), jnp.zeros((b, w), jnp.uint32)),
+    )
+    child = jnp.where(has_parent[:, None], walked, base)
+
+    # --- match / child flagging (identical to csr_extend_ref) --------------
+    is_match = valid & (depth + 1 >= n_p)
+    want_child = valid & ~is_match
+    child = jnp.where(want_child[:, None], child, jnp.uint32(0))
+    has_child = want_child & jnp.any(child != 0, axis=-1)
+    meta = jnp.stack(
+        [
+            valid.astype(jnp.int32),
+            jnp.where(valid, v, -1),
+            is_match.astype(jnp.int32),
+            has_child.astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    return cand2, child, meta
+
+
 def adjacency_any_ref(rows: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     """Per-row "does ``rows[t] ∧ mask`` have any set bit" — the inner test of
     RI-DS arc consistency.  Returns ``[n_t]`` int32 in {0, 1}."""

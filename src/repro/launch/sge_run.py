@@ -109,6 +109,19 @@ def main() -> int:
                     help="explicit target partition count for the "
                     "partitioned backend (0 = derive from --mem-budget, "
                     "or 1 if neither is given)")
+    ap.add_argument("--root-seeding", choices=("vertex", "edge", "auto"),
+                    default="vertex",
+                    help="root frontier construction (DESIGN.md §10): "
+                    "'vertex' the depth-0 per-worker node split, 'edge' "
+                    "depth-1 seeds enumerated from the rarest target edge "
+                    "class (plans are built with seed_edge='auto'), "
+                    "'auto' = edge whenever the plan carries a seed edge")
+    ap.add_argument("--csr-walk", choices=("bucketed", "flat"),
+                    default="bucketed",
+                    help="CSR adjacency-walk schedule (DESIGN.md §10): "
+                    "'bucketed' trips each lane at its row's pow2 "
+                    "degree-bucket cap, 'flat' scans every lane to the "
+                    "global deg_cap (the pre-bucketing behavior)")
     args = ap.parse_args()
     mode = "packed" if args.packed else args.mode
     if args.partitions and args.step_backend != "partitioned":
@@ -129,7 +142,9 @@ def main() -> int:
     )
     cfg = EngineConfig(n_workers=args.workers, expand_width=args.expand,
                        step_backend=args.step_backend,
-                       n_partitions=args.partitions)
+                       n_partitions=args.partitions,
+                       root_seeding=args.root_seeding,
+                       csr_walk=args.csr_walk)
     session = Enumerator(
         config=cfg, variant=args.variant, mesh=mesh,
         memory_budget_bytes=args.mem_budget or None,
@@ -142,8 +157,9 @@ def main() -> int:
         key = id(inst.target)
         if key not in indices:
             indices[key] = SubgraphIndex.build(inst.target)
-        queries.append(session.prepare(inst.pattern, name=inst.name,
-                                       index=indices[key]))
+        queries.append(session.prepare(
+            inst.pattern, name=inst.name, index=indices[key],
+            seed_edge="auto" if args.root_seeding != "vertex" else None))
 
     matches = states = 0
     pw_steals = None

@@ -67,12 +67,23 @@ def _sparse_power_law(rng):
     return tgt, extract_connected_pattern(rng, tgt, 4)
 
 
+def _hub_power_law(rng):
+    # the DESIGN.md §10 regime: flatter exponent → a hub row spanning most
+    # of the target (deg ≈ n_t) next to a near-isolated tail, so the global
+    # deg_cap is ~40× the p95 degree and bucketing/edge seeding matter
+    tgt = power_law_target(rng, 420, avg_deg=3.5, alpha=1.7, n_labels=8)
+    return tgt, extract_connected_pattern(rng, tgt, 4)
+
+
 CASES = {
     "dense": _dense,
     "selfloops": _selfloops,
     "edge_labels": _edge_labels,
     "sparse_power_law": _sparse_power_law,
+    "hub_power_law": _hub_power_law,
 }
+
+HUB_CASES = ("sparse_power_law", "hub_power_law")
 
 
 def _plan(rng, case, variant="ri-ds-si-fc"):
@@ -418,3 +429,143 @@ def test_partitioned_mesh_conformance(rng, n_parts):
     assert (got.matches, got.states) == (ref.matches, ref.states)
     assert _sorted_mappings(got.match_buf, pat.n) == _sorted_mappings(
         ref.match_buf, pat.n)
+
+
+# ---------------------------------------------------------------------------
+# edge-centric seeding + degree-bucketed CSR walk (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _seed_plans(rng, case):
+    """Vertex- and edge-seeded plans over the same (target, pattern)."""
+    tgt, pat = CASES[case](rng)
+    pk = PackedGraph.from_graph(tgt)
+    return build_plan(pat, pk), build_plan(pat, pk, seed_edge="auto"), pat
+
+
+def _node_mappings(res, plan, n_p):
+    """Sorted pattern-NODE-indexed match sets.  Edge seeding anchors the
+    seed edge at positions 0/1 so the two plans order positions
+    differently; re-indexing column ``i`` (position) to ``plan.order[i]``
+    (pattern node) makes the match sets directly comparable."""
+    buf = np.asarray(res.match_buf)
+    rows = buf.reshape(-1, buf.shape[-1])[:, :n_p]
+    rows = rows[(rows >= 0).all(axis=1)]
+    order = np.asarray(plan.order[:n_p])
+    out = np.empty_like(rows)
+    out[:, order] = rows
+    return sorted(map(tuple, out.tolist()))
+
+
+@pytest.mark.parametrize("case", HUB_CASES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_edge_seeding_conformance(rng, backend, case):
+    """Edge-seeded runs agree counter-for-counter across every backend
+    (vs the jnp edge reference), and their match sets equal the
+    vertex-seeded run's exactly — seeding only reshapes the search tree,
+    never its leaves."""
+    vplan, eplan, pat = _seed_plans(rng, case)
+    ref_v = eng.run(vplan, _cfg("jnp", collect_matches=512))
+    ref_e = eng.run(
+        eplan, _cfg("jnp", root_seeding="edge", collect_matches=512))
+    got = eng.run(
+        eplan, _cfg(backend, root_seeding="edge", collect_matches=512))
+    _assert_results_identical(ref_e, got)
+    assert got.matches == ref_v.matches
+    v_maps = _node_mappings(ref_v, vplan, pat.n)
+    assert len(v_maps) == ref_v.matches  # ring large enough: nothing dropped
+    assert _node_mappings(got, eplan, pat.n) == v_maps
+
+
+@pytest.mark.parametrize("case", HUB_CASES)
+def test_auto_seeding_resolution(rng, case):
+    """root_seeding='auto' is edge iff the plan carries a seed edge —
+    bit-identical to the explicit mode either way."""
+    vplan, eplan, _ = _seed_plans(rng, case)
+    _assert_results_identical(
+        eng.run(eplan, _cfg("csr", root_seeding="auto")),
+        eng.run(eplan, _cfg("csr", root_seeding="edge")),
+    )
+    _assert_results_identical(
+        eng.run(vplan, _cfg("csr", root_seeding="auto")),
+        eng.run(vplan, _cfg("csr", root_seeding="vertex")),
+    )
+
+
+def test_edge_seeding_requires_seed_edge(rng):
+    vplan, _, _ = _seed_plans(rng, "sparse_power_law")
+    with pytest.raises(ValueError, match="seed_edge"):
+        eng.run(vplan, _cfg("csr", root_seeding="edge"))
+
+
+def test_edge_seeding_capacity_fallback(rng):
+    """When the seed class outnumbers the stacks (forced here: one worker,
+    a 9-arc explicit seed class, stack_cap=9 → per-worker 9 > s_cap-1) the
+    edge path falls back to a depth-0 split restricted to the qualifying
+    sources — same matches, no overflow."""
+    tgt, pat = CASES["hub_power_law"](rng)
+    pk = PackedGraph.from_graph(tgt)
+    eplan = build_plan(pat, pk, seed_edge=(3, 2, 0))
+    cfg = _cfg("csr", n_workers=1, root_seeding="edge", stack_cap=9)
+    st = eng.init_state(eplan, cfg)
+    live = np.asarray(st.st_depth)[np.asarray(st.size) > 0]
+    assert (live == 0).all()  # fell back to depth-0 roots, not depth-1 seeds
+    got = eng.run(eplan, cfg)
+    ref = eng.run(build_plan(pat, pk), _cfg("csr", n_workers=1))
+    assert not got.overflow
+    assert got.matches == ref.matches
+
+
+@pytest.mark.parametrize("case", HUB_CASES)
+@pytest.mark.parametrize("n_parts", (2, 4))
+def test_partitioned_edge_seeding_conformance(rng, case, n_parts):
+    """Edge seeds route to the partition owning their source row; counts
+    and node-indexed match sets equal the monolithic vertex-seeded run."""
+    vplan, eplan, pat = _seed_plans(rng, case)
+    ref = eng.run(vplan, _cfg("csr", collect_matches=512))
+    got = eng.run_partitioned(
+        eplan,
+        _part_cfg(n_parts, root_seeding="edge", collect_matches=512),
+    )
+    assert got.matches == ref.matches
+    assert _node_mappings(got, eplan, pat.n) == _node_mappings(
+        ref, vplan, pat.n)
+
+
+@pytest.mark.parametrize("case", HUB_CASES)
+@pytest.mark.parametrize("use_pallas", (False, True))
+def test_bucketed_walk_matches_flat(rng, case, use_pallas):
+    """csr_walk='bucketed' (per-bucket trip counts) is invisible in the
+    results vs the PR-5 global-deg_cap 'flat' walk — full counter identity
+    on hub-heavy targets, through both the jitted reference and the
+    csr_extend kernels."""
+    plan, _, _ = _plan(rng, case)
+    _assert_results_identical(
+        eng.run(plan, _cfg("csr", csr_walk="flat", use_pallas=use_pallas,
+                           collect_matches=64)),
+        eng.run(plan, _cfg("csr", csr_walk="bucketed", use_pallas=use_pallas,
+                           collect_matches=64)),
+    )
+
+
+@multi_device
+@pytest.mark.parametrize("backend", ("csr", "jnp"))
+def test_mesh_edge_seeding_conformance(rng, backend):
+    """Edge-seeded hub-heavy runs shard over 2 devices unchanged (runs in
+    CI's 4-virtual-device job)."""
+    _, eplan, _ = _seed_plans(rng, "hub_power_law")
+    mesh = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+    cfg = _cfg(backend, root_seeding="edge", collect_matches=64)
+    _assert_results_identical(
+        eng.run(eplan, cfg), eng.run(eplan, cfg, mesh=mesh))
+
+
+@multi_device
+def test_mesh_bucketed_walk_conformance(rng):
+    """Bucketed-vs-flat walk identity holds under the 2-device mesh on the
+    hub-heavy case (runs in CI's 4-virtual-device job)."""
+    plan, _, _ = _plan(rng, "hub_power_law")
+    mesh = jax.make_mesh((2,), ("data",), devices=jax.devices()[:2])
+    _assert_results_identical(
+        eng.run(plan, _cfg("csr", csr_walk="flat"), mesh=mesh),
+        eng.run(plan, _cfg("csr", csr_walk="bucketed"), mesh=mesh),
+    )

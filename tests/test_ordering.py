@@ -1,0 +1,128 @@
+"""GreatestConstraintFirst edge cases + edge-centric seed selection
+(DESIGN.md §10, satellite coverage for the seeding tentpole).
+
+The ``seed_order=`` prefix is load-bearing for both delta seeding (§8)
+and edge seeding (§10) — these tests pin its contract at the corners the
+conformance suite's random cases rarely hit: fully symmetric patterns
+(every greedy key tied), anchors on zero-degree nodes, and the search-tree
+size effect of a seeded ordering on the power-law conformance target.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig
+from repro.core import engine as eng
+from repro.core import ordering as ord_mod
+from repro.core.graph import Graph, PackedGraph
+from repro.core.plan import build_plan
+from tests.conftest import extract_connected_pattern, power_law_target
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# deterministic tie-breaking
+# ---------------------------------------------------------------------------
+
+def test_tie_break_is_node_id_on_symmetric_pattern():
+    """On a 4-cycle every node has identical (w_m, w_n, deg) at every
+    greedy step — the ordering must still be a fixed function of the
+    pattern (smaller node id wins each tie)."""
+    cyc = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3), (3, 0)],
+                           undirected=True)
+    o = ord_mod.greatest_constraint_first(cyc)
+    assert o.order.tolist() == [0, 1, 2, 3]
+    # stable across repeated invocations (no hidden iteration-order state)
+    for _ in range(3):
+        assert ord_mod.greatest_constraint_first(cyc).order.tolist() == \
+            o.order.tolist()
+
+
+def test_tie_break_domain_sizes_break_symmetric_ties():
+    """Equal greedy keys + distinct domain sizes: the smaller domain wins
+    (RI-DS-SI), and equal domain sizes fall back to the id tie-break —
+    the full key chain is exercised on one symmetric pattern."""
+    cyc = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3), (3, 0)],
+                           undirected=True)
+    o = ord_mod.greatest_constraint_first(
+        cyc, domain_sizes=np.array([9, 9, 9, 2]))
+    assert o.order[0] == 3  # first pick: max degree tie → smallest domain
+    o2 = ord_mod.greatest_constraint_first(
+        cyc, domain_sizes=np.array([5, 5, 5, 5]))
+    assert o2.order.tolist() == [0, 1, 2, 3]  # all-tied domains → id order
+
+
+# ---------------------------------------------------------------------------
+# seed_order corner cases
+# ---------------------------------------------------------------------------
+
+def test_seed_order_zero_degree_anchor_endpoints():
+    """Anchoring isolated (zero-degree) nodes is legal: they head the
+    ordering verbatim, contribute no parent constraints anywhere, and the
+    connected remainder still orders greedily behind them."""
+    pat = Graph.from_edges(5, [(2, 3), (3, 4), (4, 2)], undirected=True)
+    # nodes 0 and 1 have degree 0
+    o = ord_mod.greatest_constraint_first(pat, seed_order=(1, 0))
+    assert o.order.tolist()[:2] == [1, 0]
+    assert sorted(o.order.tolist()) == list(range(5))
+    assert o.parents[0] == () and o.parents[1] == ()
+    # no parent list references the zero-degree positions
+    for plist in o.parents:
+        for (j, _, _) in plist:
+            assert o.order[j] in (2, 3, 4)
+    # every directed triangle arc still lands exactly once as a constraint
+    assert sum(len(p) for p in o.parents) == 6
+
+
+def test_seed_order_duplicates_collapse_and_rest_is_greedy():
+    """A seed prefix with duplicates collapses to first occurrence; the
+    unseeded remainder is ordered exactly as if the prefix were in_order
+    already (greedy keys computed against it)."""
+    path = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3)], undirected=True)
+    o = ord_mod.greatest_constraint_first(path, seed_order=(2, 2, 1))
+    assert o.order.tolist()[:2] == [2, 1]
+    # 3 and 0: w_m(3)=1 (nbr 2 ordered), w_m(0)=1 (nbr 1 ordered), deg tie,
+    # id tie-break → 0 before 3
+    assert o.order.tolist() == [2, 1, 0, 3]
+
+
+def test_seed_order_overrides_singleton_first():
+    pat = Graph.from_edges(3, [(0, 1), (1, 2)], undirected=True)
+    o = ord_mod.greatest_constraint_first(
+        pat, domain_sizes=np.array([4, 4, 1]), singleton_first=True,
+        seed_order=(0, 1),
+    )
+    assert o.order.tolist()[:2] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# seeded ordering vs default: search-tree size on the power-law target
+# ---------------------------------------------------------------------------
+
+def test_seed_order_state_counts_vs_default_on_power_law(rng):
+    """Seeded plans (anchor forced to positions 0/1) and the default RI
+    ordering must agree on matches while legitimately differing in visited
+    states on the hub-heavy conformance target; the seeded tree must stay
+    within a sane blowup bound (anchoring is a reordering, not a rewrite —
+    a regression here means parent constraints were dropped)."""
+    tgt = power_law_target(rng, 420, avg_deg=3.5, alpha=1.7, n_labels=8)
+    pat = extract_connected_pattern(rng, tgt, 4)
+    pk = PackedGraph.from_graph(tgt)
+    cfg = EngineConfig(n_workers=4, expand_width=2, step_backend="csr")
+    base = eng.run(build_plan(pat, pk), cfg)
+    edges = sorted({(u, v) for u, v in zip(pat.src.tolist(), pat.dst.tolist())
+                    if u != v})
+    states = []
+    for u, v in edges:
+        seeded = eng.run(build_plan(pat, pk, anchor=(u, v)), cfg)
+        assert seeded.matches == base.matches
+        states.append(seeded.states)
+    assert len(states) >= 2
+    # anchored orderings explore differently-sized trees but every parent
+    # constraint is still applied: bounded blowup, never an empty tree
+    assert all(0 < s <= 50 * base.states for s in states)
+    assert any(s != base.states for s in states)  # ordering really changed

@@ -153,6 +153,58 @@ def test_engine_scheduling_agrees_with_oracle(rng, n_parts):
 
 
 # ---------------------------------------------------------------------------
+# leg-0 root seeding: every partition owns its own root batch (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_parts", (2, 3, 5))
+def test_partition_root_entries_balance(rng, n_parts):
+    """Roots prefill one pool entry per partition, each restricted to the
+    owner's row range and jointly covering dom[0] exactly — no partition
+    seeds another partition's roots (the pre-§10 behavior put *all* roots
+    on the first-visited partition, spilling nearly every depth-1 child)."""
+    from repro.core.graph import bitmap_to_indices
+
+    tgt, pat = _sparse_case(rng)
+    plan = build_csr_plan(pat, tgt)
+    cfg = EngineConfig(n_workers=4, expand_width=2,
+                       step_backend="partitioned", n_partitions=n_parts)
+    pp = extend.plan_partitions(plan, n_parts)
+    entries = eng.partition_root_entries(plan, cfg, pp)
+    dom0 = set(bitmap_to_indices(plan.dom_bits[0]).tolist())
+    seen = set()
+    parts_with_roots = set()
+    for part, (depth, map_row, cand, pending) in entries:
+        lo, hi = int(pp.node_start[part]), int(pp.node_start[part + 1])
+        roots = set(bitmap_to_indices(cand).tolist())
+        assert depth == 0 and pending == 0
+        assert (map_row == -1).all()
+        assert roots and all(lo <= t < hi for t in roots)  # owner's rows only
+        assert not (roots & seen)  # partitions never share a root
+        seen |= roots
+        parts_with_roots.add(part)
+    assert seen == dom0  # jointly exhaustive
+    # balance: dom0 spans the row space, so >1 partition must hold roots
+    assert len(parts_with_roots) > 1
+
+
+@pytest.mark.parametrize("n_parts", (2, 4))
+def test_partition_edge_seeds_route_to_owner(rng, n_parts):
+    """Edge seeding under the partitioned driver: every depth-1 seed lands
+    in the pool of the partition owning its mapped source row."""
+    tgt, pat = _sparse_case(rng)
+    plan = build_csr_plan(pat, tgt, seed_edge="auto")
+    cfg = EngineConfig(n_workers=4, expand_width=2, root_seeding="edge",
+                       step_backend="partitioned", n_partitions=n_parts)
+    pp = extend.plan_partitions(plan, n_parts)
+    entries = eng.partition_root_entries(plan, cfg, pp)
+    assert entries
+    for part, (depth, map_row, cand, pending) in entries:
+        lo, hi = int(pp.node_start[part]), int(pp.node_start[part + 1])
+        assert depth == 1 and pending == 0
+        assert lo <= int(map_row[0]) < hi
+
+
+# ---------------------------------------------------------------------------
 # spill-ring watermark: tiny rings force mid-partition host drains
 # ---------------------------------------------------------------------------
 
