@@ -2,6 +2,16 @@
 Pallas-interpret, plus a prune-quality table (AC → FC vs AC ⇄ FC).
 
   PYTHONPATH=src python -m benchmarks.bench_domains [--patterns N] [--smoke]
+  PYTHONPATH=src python -m benchmarks.bench_domains --sparse [--smoke] \
+      [--json BENCH_10.json]
+
+``--sparse`` switches to the CSR-native domain engine at pdbsv1 scale
+(DESIGN.md §11): ``ri-ds-si-acfc`` domains for a 33k-node power-law target
+computed entirely from ``CsrPlanes`` segments — dense ``[n_elab, 2, n_t, w]``
+adjacency bitmaps never exist on the sparse side.  Asserts bit-identity
+against the dense oracle, a ≫ memory gap between the CSR domain arrays and
+the dense analytic bitmap bytes, and that the acfc domains cut enumeration
+states vs variant ``ri`` on CSR-only plans.
 
 Three ways to compute RI-DS domains for a ≥ 32-pattern same-bucket batch
 (DESIGN.md §5):
@@ -147,14 +157,167 @@ def run(n_patterns: int = 32, smoke: bool = False, seed: int = 7) -> dict:
     return payload
 
 
+SPARSE_NT = 33_067  # sge_pdbsv1 (Table 1) — the paper's largest target
+# CSR domain arrays must be >= this much smaller than the dense analytic
+# bitmap bytes; the gap grows with n_t (dense is O(n_t²/32), CSR is
+# O(nnz + n_planes·n_t)), so the smoke target gates a smaller factor
+SPARSE_MEM_FACTOR = 50
+SPARSE_MEM_FACTOR_SMOKE = 4
+SPARSE_VARIANTS = ("ri", "ri-ds-si-fc", "ri-ds-si-acfc")
+
+
+def run_sparse(smoke: bool = False, seed: int = 7) -> dict:
+    """The CSR-native domain engine at pdbsv1 scale (DESIGN.md §11).
+
+    Asserts (the ``--sparse --smoke`` CI gate, same at full scale):
+
+    * sparse domains == the dense oracle's bits for every pattern and
+      every variant in ``SPARSE_VARIANTS``;
+    * the domain-side working set (``CsrTargetDomainArrays``) is at least
+      ``SPARSE_MEM_FACTOR``× smaller than the dense analytic adjacency
+      bytes, and the CSR-only plans carry no dense bitmap planes;
+    * ``ri-ds-si-acfc`` never explores more enumeration states than ``ri``
+      on the same CSR-only plans, and strictly fewer in aggregate.
+    """
+    from repro.core import EngineConfig
+    from repro.core import engine as eng
+    from repro.core.graph import PackedGraph, n_words
+    from repro.core.plan import build_csr_plan, variant_flags
+
+    n_t = 2_000 if smoke else SPARSE_NT
+    n_pats = 3 if smoke else 6
+    tgt = graphgen.power_law_graph(n_t, avg_deg=4.0, alpha=0.5, n_labels=32,
+                                   seed=seed)
+    w = n_words(tgt.n)
+    deg = tgt.out_degrees() + tgt.in_degrees()
+    busy = np.argsort(deg)
+    pats = []
+    i = 0
+    while len(pats) < n_pats and i < 64:
+        p = graphgen.extract_pattern(
+            tgt, 5 + len(pats) % 3, seed=seed + i,
+            start=int(busy[-(40 + 17 * i)]),
+        )
+        i += 1
+        if p.m:
+            pats.append(p)
+    assert len(pats) == n_pats, "sparse pattern extraction degenerated"
+
+    # one CsrPlanes / CsrTargetDomainArrays pair shared by every query —
+    # the entire target-side working set of the sparse domain engine
+    planes = tgt.csr_planes(tgt.n_edge_labels)
+    arrs = dom_mod.csr_target_domain_arrays(tgt, w, planes=planes)
+
+    # --- memory: measured sparse bytes vs the dense analytic bitmap ------
+    sparse_bytes = sum(int(np.asarray(a).nbytes) for a in arrs)
+    dense_bytes = tgt.n_edge_labels * 2 * n_t * w * 4  # [n_elab, 2, n_t, w]
+    mem_ratio = dense_bytes / max(sparse_bytes, 1)
+    factor = SPARSE_MEM_FACTOR_SMOKE if smoke else SPARSE_MEM_FACTOR
+    assert mem_ratio >= factor, (
+        f"CSR domain arrays ({sparse_bytes} B) must be >= {factor}x "
+        f"smaller than the dense adjacency working set ({dense_bytes} B); "
+        f"measured {mem_ratio:.0f}x"
+    )
+
+    # --- bit-identity vs the dense oracle, every variant ------------------
+    t0 = time.perf_counter()
+    packed = PackedGraph.from_graph(tgt)  # the oracle's dense side only
+    t_pack = time.perf_counter() - t0
+    table = {}  # variant -> (total bits, unsat queries, sparse seconds)
+    for variant in SPARSE_VARIANTS:
+        f = variant_flags(variant)
+        kw = dict(use_ac=f["use_ac"], use_fc=f["use_fc"],
+                  interleave=f["interleave"])
+        t0 = time.perf_counter()
+        sparse = [dom_mod.compute_domains_sparse(p, tgt, w, tgt_arrays=arrs,
+                                                 **kw) for p in pats]
+        t_sparse = time.perf_counter() - t0
+        for p, s in zip(pats, sparse):
+            d = dom_mod.compute_domains(p, packed, **kw)
+            assert d.satisfiable == s.satisfiable, variant
+            np.testing.assert_array_equal(d.bits, s.bits)
+        table[variant] = (
+            sum(int(popcount(r.bits).sum()) for r in sparse),
+            sum(not r.satisfiable for r in sparse),
+            t_sparse,
+        )
+    assert table["ri-ds-si-acfc"][0] <= table["ri"][0]
+
+    # --- states reduction: CSR-only plans, ri vs ri-ds-si-acfc ------------
+    cfg = EngineConfig(n_workers=8, expand_width=4, step_backend="csr")
+    states = {}
+    for variant in ("ri", "ri-ds-si-acfc"):
+        total = 0
+        for p in pats:
+            plan = build_csr_plan(p, tgt, variant=variant, planes=planes)
+            assert plan.adj_bits.shape[2] == 0  # nothing dense, ever
+            if plan.satisfiable:
+                total += int(eng.run(plan, cfg).states)
+        states[variant] = total
+    assert states["ri-ds-si-acfc"] <= states["ri"], states
+    assert states["ri-ds-si-acfc"] < states["ri"], (
+        "acfc domains must cut enumeration states vs ri at pdbsv1 scale"
+    )
+
+    print("variant,total_domain_bits,unsat_queries,sparse_domains_s")
+    for variant, (bits, unsat, secs) in table.items():
+        print(f"{variant},{bits},{unsat},{secs:.3f}")
+    print()
+    print(common.csv_row(
+        "sparse_domain_bytes", sparse_bytes,
+        f"dense analytic {dense_bytes} B -> {mem_ratio:.0f}x smaller"))
+    print(common.csv_row(
+        "sparse_states_ri", states["ri"], "csr backend, CSR-only plans"))
+    print(common.csv_row(
+        "sparse_states_acfc", states["ri-ds-si-acfc"],
+        f"reduction {states['ri'] / max(states['ri-ds-si-acfc'], 1):.2f}x"))
+    payload = dict(
+        n_t=n_t,
+        target_edges=int(tgt.m),
+        n_patterns=len(pats),
+        nnz=int(planes.nnz),
+        deg_cap=int(planes.deg_cap),
+        sparse_domain_bytes=sparse_bytes,
+        dense_analytic_bytes=dense_bytes,
+        mem_ratio=mem_ratio,
+        pack_oracle_s=t_pack,
+        prune_table={
+            v: dict(domain_bits=b, unsat=u, sparse_s=s)
+            for v, (b, u, s) in table.items()
+        },
+        states_ri=states["ri"],
+        states_acfc=states["ri-ds-si-acfc"],
+        states_reduction=states["ri"] / max(states["ri-ds-si-acfc"], 1),
+    )
+    common.save_json("domains_sparse", payload)
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--patterns", type=int, default=32)
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--smoke", action="store_true",
                     help="small target for CI (same assertions)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="CSR-native domain engine at pdbsv1 scale "
+                    "(DESIGN.md §11) instead of the dense batch benchmark")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the payload to PATH (e.g. the "
+                    "committed BENCH_10.json)")
     args = ap.parse_args()
+    if args.sparse:
+        out = run_sparse(smoke=args.smoke, seed=args.seed)
+        common.write_json_path(args.json, out)
+        print(f"\nn_t={out['n_t']} ({out['target_edges']} edges, "
+              f"nnz={out['nnz']}): CSR domain arrays "
+              f"{out['sparse_domain_bytes']} B vs dense analytic "
+              f"{out['dense_analytic_bytes']} B ({out['mem_ratio']:.0f}x); "
+              f"states {out['states_ri']} (ri) -> {out['states_acfc']} "
+              f"(acfc, {out['states_reduction']:.2f}x fewer)")
+        return
     out = run(n_patterns=args.patterns, smoke=args.smoke, seed=args.seed)
+    common.write_json_path(args.json, out)
     print(f"\n{out['n_patterns']} patterns, one bucket {out['bucket']}: "
           f"host loop {out['host_s']:.3f}s -> batched device "
           f"{out['jitted_batch_s']:.3f}s ({out['speedup']:.1f}x); "

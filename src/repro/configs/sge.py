@@ -62,6 +62,10 @@ COLLECTION_NT = {
 # plane pair), which the csr step backend never materializes.
 SPARSE_AVG_DEG = 8
 SPARSE_DEG_CAP = 512
+# The pdbsv1-scale CSR cell runs the paper's strongest variant: its AC ⇄ FC
+# domains come from the CSR-native fixpoint (DESIGN.md §11) — no dense
+# adjacency exists at any point of preprocessing or enumeration.
+CSR_VARIANT = "ri-ds-si-acfc"
 
 
 def _w_for(n_t: int) -> int:
@@ -122,7 +126,8 @@ def build_csr_round(n_t: int, cfg: EngineConfig = ENGINE) -> CellBuild:
         logical=(eng.CSR_PLAN_LOGICAL, eng.STATE_LOGICAL),
         model_flops=float(flops),
         note=(
-            f"one csr engine round; n_t={n_t} nnz={nnz} "
+            f"one csr engine round ({CSR_VARIANT}, CSR-native domains); "
+            f"n_t={n_t} nnz={nnz} "
             f"deg_cap={SPARSE_DEG_CAP} V={cfg.n_workers} E={cfg.expand_width}"
         ),
         donate=(1,),
@@ -170,6 +175,17 @@ def smoke() -> Dict[str, float]:
     assert (res_csr.matches, res_csr.states) == (res.matches, res.states), (
         res_csr.matches, res_csr.states, res.matches, res.states,
     )
+    # the pdbsv1-class CSR-only pipeline (DESIGN.md §11): a sparse index
+    # under the full ri-ds-si-acfc variant — dense adjacency bitmaps never
+    # exist, domains come from the CSR-native AC ⇄ FC fixpoint, and the
+    # match set equals the dense session's
+    sparse = Enumerator(
+        SubgraphIndex.build(tgt, sparse=True),
+        variant=CSR_VARIANT,
+        config=EngineConfig(n_workers=4, expand_width=4, step_backend="csr"),
+    )
+    res_sp = sparse.run(sparse.prepare(pat, name="smoke0-sparse"))
+    assert res_sp.matches == res.matches, (res_sp.matches, res.matches)
     return {
         "matches": float(res.matches),
         "states": float(res.states),

@@ -20,6 +20,17 @@ Two implementations of the same pipeline live here (DESIGN.md §5):
   padded pattern batch (:func:`compute_domains_batch` — the
   ``Enumerator.prepare_batch`` backend, DESIGN.md §5).
 
+The same fixpoint engine also runs **CSR-native** (DESIGN.md §11): hand it a
+:class:`CsrTargetDomainArrays` instead of a :class:`TargetDomainArrays` and
+every AC sweep walks `repro.core.graph.CsrPlanes` segments ("some neighbor
+of ``v`` in ``D(child)``" via per-row segment bit tests) instead of dense
+adjacency bitmaps — the ``[n_elab, 2, n_t, w]`` planes are never
+materialized, which is what lets every ``ri-ds*`` variant run on CSR-only
+plans (`repro.core.plan.build_csr_plan`) at the >33k-node scale the sparse
+step backend unlocked.  Kernel: `repro.kernels.domain_ac.csr_arc_sweep`
+(scalar-prefetch — single-query only); jnp/vmap path:
+`repro.kernels.ref.csr_arc_sweep_ref`.
+
 Pipeline (paper §4.1 / §4.2.2):
 
   1. ``initial_domains``    — label equality + degree dominance + **self-loop
@@ -331,12 +342,34 @@ def initial_domains_sparse(pattern: Graph, target: Graph, w: int) -> np.ndarray:
     return bits
 
 
-def compute_domains_sparse(pattern: Graph, target: Graph, w: int) -> DomainResult:
-    """Variant-``ri`` domain pipeline over a host :class:`Graph` (sparse
-    targets): :func:`initial_domains_sparse` plus the same label-overflow /
-    empty-domain unsat rules as :func:`compute_domains`.  AC/FC are dense
-    bitmap sweeps and deliberately out of scope here — CSR-only plans are
-    restricted to ``ri`` (`repro.core.plan.build_csr_plan`)."""
+def compute_domains_sparse(
+    pattern: Graph,
+    target: Graph,
+    w: int,
+    use_ac: bool = False,
+    use_fc: bool = False,
+    interleave: bool = False,
+    use_pallas: bool = False,
+    ac_iters: Optional[int] = None,
+    tgt_arrays: Optional["CsrTargetDomainArrays"] = None,
+) -> DomainResult:
+    """Domain pipeline over a host :class:`Graph` — dense adjacency bitmaps
+    are never materialized, for any variant (DESIGN.md §11).
+
+    With the default flags (variant ``ri``) this is
+    :func:`initial_domains_sparse` plus the same label-overflow /
+    empty-domain unsat rules as :func:`compute_domains`, computed entirely on
+    host.  Any of ``use_ac`` / ``use_fc`` routes through the CSR-native
+    device fixpoint (:func:`compute_domains_csr`) instead — the same jitted
+    AC ⇄ FC engine as the dense path, sweeping `CsrPlanes` segments.
+    Bit-identical to :func:`compute_domains` on the packed form of the same
+    target with the same flags (property-tested)."""
+    if use_ac or use_fc:
+        return compute_domains_csr(
+            pattern, target, w, use_ac=use_ac, use_fc=use_fc,
+            interleave=interleave, use_pallas=use_pallas, ac_iters=ac_iters,
+            tgt_arrays=tgt_arrays,
+        )
     bits = initial_domains_sparse(pattern, target, w)
     if pattern.m and int(pattern.edge_labels.max()) >= target.n_edge_labels:
         return _unsat(bits)
@@ -399,6 +432,29 @@ class TargetDomainArrays(NamedTuple):
     loop_bits: "jnp.ndarray"  # [n_elab, w] uint32 self-loop diagonals
 
 
+class CsrTargetDomainArrays(NamedTuple):
+    """CSR-layout target-side inputs to the **same** fixpoint engine
+    (DESIGN.md §11) — the sparse twin of :class:`TargetDomainArrays`.
+
+    ``seg_start[p, t] / seg_len[p, t]`` bound target node ``t``'s neighbor
+    segment of plane ``p = elab * 2 + dir`` inside the flat ``indices``
+    array (`repro.core.graph.CsrPlanes`, global offsets); ``indices`` is
+    sentinel-tailed and over-padded by ``deg_cap`` so kernel segment slices
+    never clamp.  ``seg_iota`` is a ``[deg_cap]`` iota whose *shape* carries
+    the static ``deg_cap`` through jit.  Peak footprint is
+    ``O(nnz + n_planes · n_t)`` words vs the dense form's
+    ``n_elab · 2 · n_t · w`` — the whole point of the CSR path."""
+
+    seg_start: "jnp.ndarray"  # [n_planes, n_t] int32 global segment offsets
+    seg_len: "jnp.ndarray"  # [n_planes, n_t] int32 row lengths
+    indices: "jnp.ndarray"  # [n_idx] int32 flat CSR columns (sentinel tail)
+    seg_iota: "jnp.ndarray"  # [deg_cap] int32 (shape = static deg_cap)
+    labels: "jnp.ndarray"  # [n_t] int32
+    deg_out: "jnp.ndarray"  # [n_t] int32
+    deg_in: "jnp.ndarray"  # [n_t] int32
+    loop_bits: "jnp.ndarray"  # [n_elab, w] uint32 self-loop diagonals
+
+
 class PatternDomainArrays(NamedTuple):
     """Per-pattern padded inputs to the fixpoint engine (host numpy).
 
@@ -432,6 +488,54 @@ def target_domain_arrays(target: PackedGraph) -> TargetDomainArrays:
         deg_out=jnp.asarray(target.deg_out, jnp.int32),
         deg_in=jnp.asarray(target.deg_in, jnp.int32),
         loop_bits=jnp.asarray(target_self_loop_bits(target), jnp.uint32),
+    )
+
+
+def csr_target_domain_arrays(
+    target: Graph,
+    w: int,
+    planes=None,  # Optional[repro.core.graph.CsrPlanes]
+) -> CsrTargetDomainArrays:
+    """Ship a host :class:`Graph`'s CSR planes to the device for sparse
+    domain preprocessing — the :func:`target_domain_arrays` twin that never
+    materializes dense adjacency bitmaps (DESIGN.md §11).
+
+    Padding (``deg_cap`` up to a multiple of 8, ``nnz`` up to 1024-multiples,
+    plus a ``deg_cap`` sentinel tail) matches
+    `repro.core.extend.make_csr_plan_arrays` so domain preprocessing and the
+    CSR step backend share shape buckets."""
+    import jax.numpy as jnp
+
+    from repro.core.extend import CSR_SENTINEL, _pad_deg_cap, _pad_nnz
+
+    if planes is None:
+        planes = target.csr_planes(target.n_edge_labels)
+    indptr = np.asarray(planes.indptr)
+    seg_start = np.ascontiguousarray(indptr[:, :-1]).astype(np.int32)
+    seg_len = np.diff(indptr, axis=1).astype(np.int32)
+    deg_cap = _pad_deg_cap(int(planes.deg_cap))
+    nnz = int(planes.nnz)
+    n_idx = _pad_nnz(nnz) + deg_cap
+    indices = np.full(n_idx, CSR_SENTINEL, np.int32)
+    indices[:nnz] = np.asarray(planes.indices)
+
+    n_elab = planes.n_edge_labels
+    loop_mask = target.src == target.dst
+    loop_bits = np.zeros((n_elab, w), dtype=np.uint32)
+    for l in range(n_elab):
+        idx = target.src[loop_mask & (target.edge_labels == l)]
+        if idx.size:
+            loop_bits[l] = bitmap_from_indices(idx, target.n, w)
+
+    return CsrTargetDomainArrays(
+        seg_start=jnp.asarray(seg_start),
+        seg_len=jnp.asarray(seg_len),
+        indices=jnp.asarray(indices),
+        seg_iota=jnp.arange(deg_cap, dtype=jnp.int32),
+        labels=jnp.asarray(target.labels, jnp.int32),
+        deg_out=jnp.asarray(target.out_degrees(), jnp.int32),
+        deg_in=jnp.asarray(target.in_degrees(), jnp.int32),
+        loop_bits=jnp.asarray(loop_bits),
     )
 
 
@@ -509,6 +613,12 @@ def _device_fixpoint(
     when unsatisfiable (the :class:`DomainResult` invariant, on device).
     All control flow is static except the ``lax.while_loop`` fixpoint
     iteration; the function vmaps over a pattern batch (``pat`` axis 0).
+
+    ``tgt`` selects the layout: a :class:`TargetDomainArrays` sweeps dense
+    adjacency planes, a :class:`CsrTargetDomainArrays` walks CSR segments
+    (DESIGN.md §11) — only the arc-support mask differs; the initial
+    domains, loop/overflow unsat rules, FC step, and fixpoint loops are the
+    same traced code.
     """
     import jax
     import jax.numpy as jnp
@@ -520,8 +630,14 @@ def _device_fixpoint(
     if use_pallas:
         from repro.kernels import ops as kops
 
-    n_planes, n_t, w = tgt.adj_flat.shape
-    n_elab = n_planes // 2
+    is_csr = isinstance(tgt, CsrTargetDomainArrays)
+    if is_csr:
+        n_elab, w = tgt.loop_bits.shape
+        n_t = tgt.labels.shape[0]
+        deg_cap = tgt.seg_iota.shape[0]
+    else:
+        n_planes, n_t, w = tgt.adj_flat.shape
+        n_elab = n_planes // 2
     p_pad = pat.labels.shape[0]
     a_pad = pat.arc_p.shape[0]
     l_pad = pat.loop_p.shape[0]
@@ -580,8 +696,31 @@ def _device_fixpoint(
         ok = kops.arc_any_sweep(tgt.adj_flat, arc_row, bits[pat.arc_q])
         return jax.vmap(kref.pack_bits_ref, (0, None))(ok, w)
 
+    def arc_masks_csr_jnp(bits):
+        # the oracle doubles as the (vmappable) jnp compute path; "per-arc"
+        # has no CSR kernel, so it lands here too.
+        ok = kref.csr_arc_sweep_ref(
+            tgt.seg_start, tgt.seg_len, tgt.indices, arc_row,
+            bits[pat.arc_q], deg_cap=deg_cap,
+        )
+        return jax.vmap(kref.pack_bits_ref, (0, None))(ok, w)
+
+    def arc_masks_csr_pallas(bits):
+        ok = kops.csr_arc_sweep(
+            tgt.seg_start, tgt.seg_len, tgt.indices, arc_row,
+            bits[pat.arc_q], deg_cap=deg_cap,
+        )
+        return jax.vmap(kref.pack_bits_ref, (0, None))(ok, w)
+
+    if is_csr:
+        arc_masks = (
+            arc_masks_csr_pallas if pallas_mode == "sweep" else arc_masks_csr_jnp
+        )
+    else:
+        arc_masks = arc_masks_pallas if pallas_mode == "sweep" else arc_masks_jnp
+
     def ac_sweep(bits):
-        masks = (arc_masks_pallas if pallas_mode == "sweep" else arc_masks_jnp)(bits)
+        masks = arc_masks(bits)
         # neutralize pad slots, kill overflow arcs, then AND per pattern node
         masks = jnp.where(pat.arc_valid[:, None], masks, ones_row[None, :])
         masks = jnp.where(arc_dead[:, None], zeros_row[None, :], masks)
@@ -703,6 +842,42 @@ def compute_domains_device(
     import numpy as _np
 
     tgt = tgt_arrays if tgt_arrays is not None else target_domain_arrays(target)
+    pat = _to_device(pattern_domain_arrays(pattern))
+    fn = device_fixpoint(
+        use_ac=use_ac, use_fc=use_fc, interleave=interleave,
+        pallas_mode="sweep" if use_pallas else "off",
+        max_iters=ac_iters, batched=False,
+    )
+    bits, sat = jax.block_until_ready(fn(tgt, pat))
+    return DomainResult(_np.asarray(bits)[: pattern.n].copy(), bool(sat))
+
+
+def compute_domains_csr(
+    pattern: Graph,
+    target: Graph,
+    w: int,
+    use_ac: bool = True,
+    use_fc: bool = False,
+    interleave: bool = False,
+    use_pallas: bool = False,
+    ac_iters: Optional[int] = None,
+    tgt_arrays: Optional[CsrTargetDomainArrays] = None,
+) -> DomainResult:
+    """Single-query CSR-native device preprocessing (DESIGN.md §11):
+    :func:`compute_domains_device` without a :class:`PackedGraph` — the AC
+    sweeps walk `CsrPlanes` segments, so dense adjacency bitmaps are never
+    materialized.  Bit-identical to :func:`compute_domains` on the packed
+    form of the same target with the same flags when run to convergence
+    (``ac_iters=None``; finite ``ac_iters`` bounds Jacobi whole-sweeps, as
+    in the dense engine).  ``use_pallas`` routes each sweep through the
+    scalar-prefetch `csr_arc_sweep` kernel."""
+    import jax
+    import numpy as _np
+
+    tgt = (
+        tgt_arrays if tgt_arrays is not None
+        else csr_target_domain_arrays(target, w)
+    )
     pat = _to_device(pattern_domain_arrays(pattern))
     fn = device_fixpoint(
         use_ac=use_ac, use_fc=use_fc, interleave=interleave,

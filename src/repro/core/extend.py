@@ -472,6 +472,21 @@ def resolve_step_backend_for_plan(cfg: "EngineConfig", plan: SearchPlan) -> str:
     return resolve_step_backend(cfg, plan.n_t)
 
 
+def validate_backend_for_plan(cfg: "EngineConfig", plan: SearchPlan) -> None:
+    """Fail fast when an **explicitly dense** step backend is asked to run
+    a CSR-only plan.  :func:`plan_arrays_for` raises for the combination
+    anyway, but only after the session has already traced (and counted) an
+    engine for the doomed configuration — sessions call this at
+    prepare/run entry instead, before any compile is spent."""
+    if cfg.step_backend in ("jnp", "pallas") and is_csr_only(plan):
+        raise ValueError(
+            f"step_backend={cfg.step_backend!r} is a dense backend, but the "
+            "plan is CSR-only (layout: csr — built by build_csr_plan, so "
+            "dense adj_bits were never materialized); valid backends for "
+            "this plan are 'csr', 'auto', or 'partitioned'"
+        )
+
+
 def plan_arrays_for(cfg: "EngineConfig", plan: SearchPlan,
                     adj_bits=None) -> AnyPlanArrays:
     """The one plan-array construction point for both drivers and the

@@ -182,8 +182,12 @@ def build_csr_plan(
     p_pad: Optional[int] = None,
     max_parents: Optional[int] = None,
     w: Optional[int] = None,
+    ac_iters: Optional[int] = None,
+    domains: Optional[dom_mod.DomainResult] = None,
+    use_pallas: bool = False,
     anchor: Optional[Tuple[int, ...]] = None,
     seed_edge=None,
+    planes: Optional[CsrPlanes] = None,
 ) -> SearchPlan:
     """Build a **CSR-only** :class:`SearchPlan` straight from a host
     :class:`Graph` — the dense ``[n_elab, 2, n_t, w]`` adjacency bitmaps are
@@ -192,22 +196,45 @@ def build_csr_plan(
     ``plan.csr`` holds the canonical adjacency planes; only
     ``step_backend="csr"`` (or ``"auto"``) can execute the result.
 
-    Restricted to variant ``ri``: AC / FC preprocessing are dense bitmap
-    sweeps over the adjacency planes the sparse path exists to avoid.
+    Every variant is supported (DESIGN.md §11): ``ri`` computes initial
+    domains on host, the ``ri-ds*`` variants run the CSR-native device
+    fixpoint (`repro.core.domains.compute_domains_csr` — AC sweeps walk the
+    same `CsrPlanes` the engine enumerates over; ``use_pallas`` routes them
+    through the scalar-prefetch `csr_arc_sweep` kernel).  Domains are
+    bit-identical to the dense :func:`build_plan` pipeline for the same
+    variant.  ``domains=`` short-circuits with a precomputed
+    :class:`~repro.core.domains.DomainResult` (the batched session path),
+    which must match the variant's flags.  ``planes=`` threads an
+    already-built :class:`~repro.core.graph.CsrPlanes` through (the
+    session's sparse index caches one per version) instead of re-deriving
+    it from the edge list per pattern.
     """
     flags = variant_flags(variant)
-    if flags["use_ac"] or flags["use_fc"]:
-        raise ValueError(
-            f"build_csr_plan supports variant 'ri' only (got {variant!r}): "
-            "AC/FC preprocessing sweeps dense adjacency bitmaps"
-        )
+    use_ds, use_si = flags["use_ac"], flags["use_si"]
     w = w or n_words(target.n)
-    dres = dom_mod.compute_domains_sparse(pattern, target, w)
     n_elab = target.n_edge_labels
-    planes = target.csr_planes(n_elab)
+    if planes is None:
+        planes = target.csr_planes(n_elab)
+    if domains is not None:
+        if domains.bits.shape != (pattern.n, w):
+            raise ValueError(
+                f"precomputed domains shape {domains.bits.shape} != "
+                f"{(pattern.n, w)}"
+            )
+        dres = domains
+    else:
+        tgt_arrays = (
+            dom_mod.csr_target_domain_arrays(target, w, planes=planes)
+            if (use_ds or flags["use_fc"]) else None
+        )
+        dres = dom_mod.compute_domains_sparse(
+            pattern, target, w, use_ac=use_ds, use_fc=flags["use_fc"],
+            interleave=flags["interleave"], use_pallas=use_pallas,
+            ac_iters=ac_iters, tgt_arrays=tgt_arrays,
+        )
     seed = _resolve_seed_edge(pattern, seed_edge, lambda: planes)
     return _assemble_plan(
-        pattern, dres, variant, use_ds=False, use_si=False,
+        pattern, dres, variant, use_ds=use_ds, use_si=use_si,
         p_pad=p_pad, max_parents=max_parents,
         n_t=target.n, w=w,
         adj_bits=np.zeros((n_elab, 2, 0, w), dtype=np.uint32),

@@ -79,9 +79,10 @@ from repro.core.graph import (
     Graph,
     PackedGraph,
     bitmap_to_indices,
+    n_words,
     popcount,
 )
-from repro.core.plan import SearchPlan, build_plan, variant_flags
+from repro.core.plan import SearchPlan, build_csr_plan, build_plan, variant_flags
 from repro.core.scheduler import balance_assignment
 
 # Padded pattern-position buckets: every plan's ``p_pad`` snaps up to one of
@@ -164,6 +165,16 @@ class SubgraphIndex:
     build_s: float
     version: int = 0
     fingerprint: str = ""
+    # CSR-only index (DESIGN.md §11): build(target, sparse=True) never
+    # materializes the dense adjacency bitmaps — ``packed`` is a metadata
+    # shell whose ``adj_bits`` has a zero node axis, ``graph`` retains the
+    # host Graph for CSR-native preprocessing, and plans built against the
+    # index come from build_csr_plan (only the csr/auto/partitioned step
+    # backends can run them).
+    sparse: bool = False
+    graph: Optional[Graph] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     # lazily built sparse adjacency, shared across versions per plane
     # (update() patches only touched planes — see graph.CsrPlaneSet)
     _plane_set: Optional[CsrPlaneSet] = dataclasses.field(
@@ -174,9 +185,14 @@ class SubgraphIndex:
     )
 
     @staticmethod
-    def build(target: Union[Graph, PackedGraph, "SubgraphIndex"]) -> "SubgraphIndex":
+    def build(
+        target: Union[Graph, PackedGraph, "SubgraphIndex"],
+        sparse: bool = False,
+    ) -> "SubgraphIndex":
         if isinstance(target, SubgraphIndex):
             return target
+        if sparse:
+            return SubgraphIndex._build_sparse(target)
         t0 = time.perf_counter()
         packed = target if isinstance(target, PackedGraph) else PackedGraph.from_graph(target)
         n_labels = int(packed.labels.max()) + 1 if packed.n else 0
@@ -191,6 +207,47 @@ class SubgraphIndex:
             build_s=time.perf_counter() - t0,
             version=0,
             fingerprint=_fingerprint_packed(packed),
+        )
+
+    @staticmethod
+    def _build_sparse(target: Graph) -> "SubgraphIndex":
+        """CSR-only index of a host :class:`Graph`: the packed form is a
+        metadata shell (labels/degrees plus an ``adj_bits`` placeholder with
+        a zero node axis) and the canonical :class:`CsrPlanes` are built
+        eagerly — they *are* the adjacency."""
+        if not isinstance(target, Graph):
+            raise TypeError(
+                "SubgraphIndex.build(sparse=True) needs a host Graph — a "
+                f"{type(target).__name__} has already materialized (or "
+                "implies) the dense bitmaps"
+            )
+        t0 = time.perf_counter()
+        w = n_words(target.n)
+        nl = target.n_edge_labels
+        planes = target.csr_planes(nl)
+        labels = np.asarray(target.labels, dtype=np.int32)
+        packed = PackedGraph(
+            n=target.n,
+            w=w,
+            adj_bits=np.zeros((nl, 2, 0, w), dtype=np.uint32),
+            labels=labels,
+            deg_out=target.out_degrees(),
+            deg_in=target.in_degrees(),
+        )
+        n_labels = int(labels.max()) + 1 if target.n else 0
+        counts = np.bincount(labels, minlength=max(n_labels, 1)).astype(np.int64)
+        degs = packed.deg_out + packed.deg_in
+        return SubgraphIndex(
+            packed=packed,
+            n_labels=n_labels,
+            label_counts=counts,
+            max_degree=int(degs.max()) if target.n else 0,
+            build_s=time.perf_counter() - t0,
+            version=0,
+            fingerprint=_fingerprint_sparse(planes, labels, target.n, w),
+            sparse=True,
+            graph=target,
+            _csr_flat=planes,
         )
 
     @property
@@ -210,6 +267,11 @@ class SubgraphIndex:
     def plane_set(self) -> CsrPlaneSet:
         """Per-plane CSR adjacency, built lazily and patched (not rebuilt)
         by :meth:`update` — untouched planes share buffers across versions."""
+        if self.sparse:
+            raise ValueError(
+                "sparse SubgraphIndex has no per-plane set derived from "
+                "dense bitmaps; use csr_planes() for the flat adjacency"
+            )
         if self._plane_set is None:
             object.__setattr__(
                 self, "_plane_set", CsrPlaneSet.from_bitmaps(self.packed.adj_bits)
@@ -255,6 +317,12 @@ class SubgraphIndex:
         build from a deduped arc list when exact degree parity with a
         fresh build matters.
         """
+        if self.sparse:
+            raise NotImplementedError(
+                "incremental update of a sparse (CSR-only) SubgraphIndex is "
+                "not supported — rebuild with SubgraphIndex.build(graph, "
+                "sparse=True), or build a dense index when deltas are needed"
+            )
         t0 = time.perf_counter()
         adds = delta_mod.normalize_edges(add_edges)
         rems = delta_mod.normalize_edges(remove_edges)
@@ -366,6 +434,18 @@ def _fingerprint_packed(packed: PackedGraph) -> str:
     return h.hexdigest()
 
 
+def _fingerprint_sparse(planes: CsrPlanes, labels: np.ndarray, n: int, w: int) -> str:
+    """Content fingerprint of a sparse (CSR-only) index: shapes + CSR
+    adjacency + node labels — same role as :func:`_fingerprint_packed`
+    without ever touching dense bitmaps."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((n, w, planes.n_planes, planes.nnz, "csr")).encode())
+    h.update(np.ascontiguousarray(planes.indptr).tobytes())
+    h.update(np.ascontiguousarray(planes.indices).tobytes())
+    h.update(np.ascontiguousarray(labels).tobytes())
+    return h.hexdigest()
+
+
 # ---------------------------------------------------------------------------
 # Query — a pattern compiled against an index
 # ---------------------------------------------------------------------------
@@ -433,18 +513,35 @@ def prepare_query(
     anchors the edge's endpoints at positions 0/1 so engines with
     ``root_seeding="edge"``/``"auto"`` can seed from the rare target edge
     class.  Selection reuses the index's cached CSR planes.
+
+    Preparation routes by the index layout (DESIGN.md §11): a **sparse**
+    index (``SubgraphIndex.build(graph, sparse=True)``) compiles through
+    :func:`~repro.core.plan.build_csr_plan` — domains come from the
+    CSR-native fixpoint and the resulting plan is CSR-only.
     """
     index = SubgraphIndex.build(index)
     t0 = time.perf_counter()
-    plan = build_plan(
-        pattern,
-        index.packed,
-        variant=variant,
-        p_pad=p_pad if p_pad is not None else snap_p_pad(pattern.n),
-        max_parents=max_parents if max_parents is not None else DEFAULT_MAX_PARENTS,
-        csr_factory=index.csr_planes,
-        seed_edge=seed_edge,
-    )
+    if index.sparse:
+        plan = build_csr_plan(
+            pattern,
+            index.graph,
+            variant=variant,
+            p_pad=p_pad if p_pad is not None else snap_p_pad(pattern.n),
+            max_parents=max_parents if max_parents is not None else DEFAULT_MAX_PARENTS,
+            w=index.w,
+            seed_edge=seed_edge,
+            planes=index.csr_planes(),
+        )
+    else:
+        plan = build_plan(
+            pattern,
+            index.packed,
+            variant=variant,
+            p_pad=p_pad if p_pad is not None else snap_p_pad(pattern.n),
+            max_parents=max_parents if max_parents is not None else DEFAULT_MAX_PARENTS,
+            csr_factory=index.csr_planes,
+            seed_edge=seed_edge,
+        )
     return Query(
         pattern=pattern,
         plan=plan,
@@ -642,8 +739,10 @@ class Enumerator:
         # thread (DESIGN.md §8)
         self._cache_lock = threading.Lock()
         # target-side device arrays for batched domain preprocessing, keyed
-        # by the packed target's identity (pinned so ids can't be recycled)
-        self._dom_targets: Dict[int, Tuple[PackedGraph, dom_mod.TargetDomainArrays]] = {}
+        # by the packed target's identity (pinned so ids can't be recycled);
+        # values are dense TargetDomainArrays or CsrTargetDomainArrays per
+        # the index layout
+        self._dom_targets: Dict[int, Tuple[PackedGraph, tuple]] = {}
         self.compiles = 0
         self.cache_hits = 0
         self.evictions = 0
@@ -719,6 +818,9 @@ class Enumerator:
             return len(stale)
 
     def _engine_fn(self, cfg: EngineConfig, kind: str, pack: int, query: Query) -> Callable:
+        # layout check first: an explicitly dense backend against a
+        # CSR-only plan must raise *before* a compile is spent/counted
+        extend.validate_backend_for_plan(cfg, query.plan)
         shape_key = (cfg, kind, pack, eng.mesh_signature(self.mesh)) + query.bucket
         resolved = eng.resolve_step_backend_for_plan(cfg, query.plan)
         if resolved == "csr":
@@ -780,17 +882,22 @@ class Enumerator:
         """Compile a pattern into a bucketed :class:`Query` for this session.
 
         ``seed_edge`` is forwarded to :func:`prepare_query` (edge-centric
-        seeding, DESIGN.md §10)."""
+        seeding, DESIGN.md §10).  A sparse index yields a CSR-only plan;
+        if this session's step backend is explicitly dense
+        (``"jnp"``/``"pallas"``), that combination can never run, so it
+        raises here — before any engine is compiled."""
         idx = index if index is not None else self.index
         if idx is None:
             raise ValueError(
                 "Enumerator has no default SubgraphIndex; pass index= to "
                 "prepare() or construct Enumerator(index, ...)"
             )
-        return prepare_query(
+        q = prepare_query(
             pattern, idx, variant=variant or self.variant, name=name,
             seed_edge=seed_edge,
         )
+        extend.validate_backend_for_plan(self.config, q.plan)
+        return q
 
     def prepare_batch(
         self,
@@ -809,6 +916,10 @@ class Enumerator:
         per-query :meth:`prepare` (the numpy oracle) — only the wall-clock
         changes.  ``backend='numpy'`` (or ``Enumerator(domain_backend=
         'numpy')``) falls back to per-query host preprocessing.
+
+        A **sparse** index routes the same grouped fixpoint through the
+        CSR-layout target arrays (DESIGN.md §11) and assembles CSR-only
+        plans — dense adjacency bitmaps never exist on host or device.
         """
         idx = index if index is not None else self.index
         if idx is None:
@@ -863,15 +974,28 @@ class Enumerator:
             dom_s = (time.perf_counter() - t0) / max(len(idxs), 1)
             for i, dres in zip(idxs, doms):
                 t1 = time.perf_counter()
-                plan = build_plan(
-                    patterns[i],
-                    idx.packed,
-                    variant=variant,
-                    p_pad=snap_p_pad(patterns[i].n),
-                    max_parents=DEFAULT_MAX_PARENTS,
-                    domains=dres,
-                    csr_factory=idx.csr_planes,
-                )
+                if idx.sparse:
+                    plan = build_csr_plan(
+                        patterns[i],
+                        idx.graph,
+                        variant=variant,
+                        p_pad=snap_p_pad(patterns[i].n),
+                        max_parents=DEFAULT_MAX_PARENTS,
+                        w=idx.w,
+                        domains=dres,
+                        planes=idx.csr_planes(),
+                    )
+                else:
+                    plan = build_plan(
+                        patterns[i],
+                        idx.packed,
+                        variant=variant,
+                        p_pad=snap_p_pad(patterns[i].n),
+                        max_parents=DEFAULT_MAX_PARENTS,
+                        domains=dres,
+                        csr_factory=idx.csr_planes,
+                    )
+                extend.validate_backend_for_plan(self.config, plan)
                 out[i] = Query(
                     pattern=patterns[i],
                     plan=plan,
@@ -887,15 +1011,24 @@ class Enumerator:
     # bitmaps dominate the footprint, so keep only a few (FIFO-evicted).
     _DOM_TARGET_CACHE = 4
 
-    def _target_domain_arrays(self, index: SubgraphIndex) -> dom_mod.TargetDomainArrays:
+    def _target_domain_arrays(
+        self, index: SubgraphIndex
+    ) -> Union[dom_mod.TargetDomainArrays, dom_mod.CsrTargetDomainArrays]:
         """Device-resident target arrays for domain preprocessing, built
         once per index and cached (bounded) on the session.  The cache
-        entry pins the PackedGraph so its id() cannot be recycled."""
+        entry pins the PackedGraph so its id() cannot be recycled.  A
+        sparse index gets the CSR-layout arrays (DESIGN.md §11) — the
+        fixpoint engine dispatches on the tuple type."""
         key = id(index.packed)
         hit = self._dom_targets.get(key)
         if hit is not None:
             return hit[1]
-        arrays = dom_mod.target_domain_arrays(index.packed)
+        if index.sparse:
+            arrays = dom_mod.csr_target_domain_arrays(
+                index.graph, index.w, planes=index.csr_planes()
+            )
+        else:
+            arrays = dom_mod.target_domain_arrays(index.packed)
         while len(self._dom_targets) >= self._DOM_TARGET_CACHE:
             self._dom_targets.pop(next(iter(self._dom_targets)))
         self._dom_targets[key] = (index.packed, arrays)
@@ -906,13 +1039,24 @@ class Enumerator:
         l_pad: int, index: SubgraphIndex,
     ) -> Callable:
         """The jitted batched domain fixpoint for one shape bucket, keyed
-        into the session compile cache (kind='domains')."""
+        into the session compile cache (kind='domains').  For a sparse
+        index the key carries the CSR domain-array shape components
+        (padded ``nnz`` and ``deg_cap``) — two same-``(n_t, w)`` targets of
+        different density trace differently shaped fixpoints and must not
+        collide."""
         pallas_mode = "per-arc" if self.config.use_pallas else "off"
         key = (
             "domains", flags["use_ac"], flags["use_fc"], flags["interleave"],
             pallas_mode, b_pad, p_pad, a_pad, l_pad,
             index.n, index.w, index.n_edge_labels,
         )
+        if index.sparse:
+            cp = index.csr_planes()
+            key = key + (
+                "csr",
+                extend._pad_nnz(int(cp.nnz)),
+                extend._pad_deg_cap(int(cp.deg_cap)),
+            )
         fn = self._cache_get(key)
         if fn is not None:
             return fn
@@ -1235,17 +1379,26 @@ class Enumerator:
         for anchor in delta_mod.pattern_edge_triples(query.pattern):
             aplan = query._anchors.get(anchor)
             if aplan is None:
-                pa, pb, _ = anchor
-                aplan = build_plan(
-                    query.pattern,
-                    idx.packed,
-                    variant=query.variant,
-                    p_pad=query.plan.p_pad,
-                    max_parents=query.plan.max_parents,
-                    domains=query._anchor_domains,
-                    anchor=(pa,) if pa == pb else (pa, pb),
-                    csr_factory=idx.csr_planes,
-                )
+                if query.plan.seed_edge == anchor:
+                    # An edge-seeded query plan *is* this anchor's plan:
+                    # _assemble_plan already forced the seed edge's
+                    # endpoints to positions 0/1 with the same domains and
+                    # padding, so the anchor seeds stay aligned with the
+                    # query's own seed-edge ordering instead of rebuilding
+                    # an identical plan (PR-9 follow-up).
+                    aplan = query.plan
+                else:
+                    pa, pb, _ = anchor
+                    aplan = build_plan(
+                        query.pattern,
+                        idx.packed,
+                        variant=query.variant,
+                        p_pad=query.plan.p_pad,
+                        max_parents=query.plan.max_parents,
+                        domains=query._anchor_domains,
+                        anchor=(pa,) if pa == pb else (pa, pb),
+                        csr_factory=idx.csr_planes,
+                    )
                 query._anchors[anchor] = aplan
             yield anchor, aplan
 

@@ -22,6 +22,15 @@ Two granularities:
   single-query device fixpoint (`repro.core.domains.device_fixpoint`); the
   scalar-prefetch grid spec has no vmap rule, so the batched path falls
   back to per-arc kernels.
+* :func:`csr_arc_sweep` — the same sweep over **CSR planes** (DESIGN.md
+  §11): no dense ``[n_planes, n_t, w]`` operand exists, so each grid step
+  walks a row tile's neighbor segments with ``pl.ds`` dynamic slices of the
+  flat ``indices`` block (the `csr_extend` load pattern) and any-reduces
+  the mask bit tests per row.  The per-plane segment bounds arrive as
+  ``(1, tr)`` operand blocks whose ``index_map`` chases the
+  scalar-prefetched ``arc_row`` table.  Scalar-prefetch again means no
+  vmap rule — batched CSR fixpoints use the jnp oracle
+  (`repro.kernels.ref.csr_arc_sweep_ref`).
 """
 
 from __future__ import annotations
@@ -30,10 +39,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.candidate_mask import pad_words
+from repro.kernels.csr_extend import SENTINEL
 
 ROW_TILE = 256
 
@@ -123,4 +134,102 @@ def arc_any_sweep(
         out_shape=jax.ShapeDtypeStruct((n_arcs, n_pad), jnp.int32),
         interpret=interpret,
     )(arc_row.astype(jnp.int32), adj_p, masks_p)
+    return out[:, :n_t]
+
+
+def _csr_sweep_kernel(
+    arc_row_ref, sst_ref, sln_ref, ind_ref, mask_ref, out_ref, *, deg_cap: int
+):
+    tr = out_ref.shape[1]
+    wp = mask_ref.shape[1]
+    offs = lax.iota(jnp.int32, deg_cap)
+    row_iota = lax.iota(jnp.int32, tr)
+    mask = mask_ref[0, :]  # [wp]
+
+    def row(j, acc):
+        s = sst_ref[0, j]
+        ln = jnp.minimum(sln_ref[0, j], deg_cap)
+        u = ind_ref[0, pl.ds(s, deg_cap)]  # [deg_cap]
+        k_on = offs < ln
+        u_c = jnp.clip(u, 0, wp * 32 - 1)
+        word = u_c // 32
+        bit = (u_c % 32).astype(jnp.uint32)
+        in_dom = (jnp.take(mask, word) >> bit) & jnp.uint32(1)
+        hit = jnp.any(k_on & (in_dom != 0))
+        return jnp.where(row_iota == j, hit.astype(jnp.int32), acc)
+
+    out_ref[...] = lax.fori_loop(0, tr, row, jnp.zeros((tr,), jnp.int32))[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("deg_cap", "interpret", "row_tile"))
+def csr_arc_sweep(
+    seg_start: jnp.ndarray,  # [n_planes, n_t] int32 global offsets
+    seg_len: jnp.ndarray,  # [n_planes, n_t] int32 row lengths
+    indices: jnp.ndarray,  # [n_idx] int32 flat CSR columns (sentinel tail)
+    arc_row: jnp.ndarray,  # [n_arcs] int32 plane index per arc
+    masks: jnp.ndarray,  # [n_arcs, w] uint32 (D(q) bitmap per arc)
+    deg_cap: int = 8,
+    interpret: bool = True,
+    row_tile: int = ROW_TILE,
+) -> jnp.ndarray:
+    """All arcs of one CSR AC sweep in one kernel call (DESIGN.md §11).
+
+    ``out[a, t] = any(u in row(arc_row[a], t) : bit u set in masks[a])`` —
+    ``[n_arcs, n_t]`` int32 {0, 1}, the sparse twin of `arc_any_sweep`.
+    Grid ``(n_arcs, row tiles)``; the per-plane ``seg_start`` / ``seg_len``
+    blocks are selected by the scalar-prefetched ``arc_row`` table, and
+    each row's neighbor segment is a ``pl.ds`` slice of the flat VMEM
+    ``indices`` block — dense adjacency bitmaps never exist.  ``indices``
+    must be over-padded by ``deg_cap``
+    (`repro.core.domains.csr_target_domain_arrays` guarantees it) so
+    segment slices never clamp.  Oracle:
+    `repro.kernels.ref.csr_arc_sweep_ref`.
+    """
+    n_arcs, w = masks.shape
+    n_t = seg_start.shape[1]
+    wp = pad_words(w)
+    tr = min(row_tile, max(8, ((n_t + 7) // 8) * 8))
+    n_pad = ((n_t + tr - 1) // tr) * tr
+    sst_p = jnp.pad(seg_start, ((0, 0), (0, n_pad - n_t)))
+    sln_p = jnp.pad(seg_len, ((0, 0), (0, n_pad - n_t)))  # pad rows: len 0
+    masks_p = jnp.pad(masks, ((0, 0), (0, wp - w)))
+    n_ind = indices.shape[0]
+    n_ipad = pad_words(n_ind)
+    if n_ipad != n_ind:
+        indices = jnp.pad(indices, (0, n_ipad - n_ind), constant_values=SENTINEL)
+
+    def seg_map(a, i, arc_row_s):
+        return (arc_row_s[a], i)
+
+    def ind_map(a, i, arc_row_s):
+        return (0, 0)
+
+    def mask_map(a, i, arc_row_s):
+        return (a, 0)
+
+    def out_map(a, i, arc_row_s):
+        return (a, i)
+
+    out = pl.pallas_call(
+        functools.partial(_csr_sweep_kernel, deg_cap=deg_cap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_arcs, n_pad // tr),
+            in_specs=[
+                pl.BlockSpec((1, tr), seg_map),  # seg_start
+                pl.BlockSpec((1, tr), seg_map),  # seg_len
+                pl.BlockSpec((1, n_ipad), ind_map),  # flat CSR indices
+                pl.BlockSpec((1, wp), mask_map),
+            ],
+            out_specs=pl.BlockSpec((1, tr), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_arcs, n_pad), jnp.int32),
+        interpret=interpret,
+    )(
+        arc_row.astype(jnp.int32),
+        sst_p.astype(jnp.int32),
+        sln_p.astype(jnp.int32),
+        indices.reshape(1, n_ipad),
+        masks_p,
+    )
     return out[:, :n_t]

@@ -91,6 +91,15 @@ def arc_any_sweep(adj_flat, arc_row, masks, interpret=None):
     )
 
 
+def csr_arc_sweep(seg_start, seg_len, indices, arc_row, masks, deg_cap=8,
+                  interpret=None):
+    """See `repro.kernels.domain_ac.csr_arc_sweep` (the sparse AC sweep)."""
+    return _ac.csr_arc_sweep(
+        seg_start, seg_len, indices, arc_row, masks, deg_cap=deg_cap,
+        interpret=resolve_interpret(interpret),
+    )
+
+
 def popcount_rows(bits, interpret=None):
     """See `repro.kernels.popcount_reduce.popcount_rows`."""
     return _pc.popcount_rows(bits, interpret=resolve_interpret(interpret))

@@ -341,6 +341,48 @@ def arc_any_sweep_ref(
     return lax.map(one, (arc_row, masks))
 
 
+def csr_arc_sweep_ref(
+    seg_start: jnp.ndarray,  # [n_planes, n_t] int32 global offsets into indices
+    seg_len: jnp.ndarray,  # [n_planes, n_t] int32 row lengths
+    indices: jnp.ndarray,  # [n_idx] int32 flat CSR columns (sentinel tail)
+    arc_row: jnp.ndarray,  # [n_arcs] int32 plane index per arc
+    masks: jnp.ndarray,  # [n_arcs, w] uint32 (D(q) bitmap per arc)
+    *,
+    deg_cap: int,
+) -> jnp.ndarray:
+    """All arcs of one **CSR** AC sweep: ``out[a, t] = any(u in
+    row(arc_row[a], t) : bit u set in masks[a])`` — the oracle for
+    `repro.kernels.domain_ac.csr_arc_sweep`, and the jnp compute path of
+    the sparse domain fixpoint (DESIGN.md §11).
+
+    Matches the kernel's walk contract exactly: each row is consumed for at
+    most ``deg_cap`` entries (the global padded row cap — never truncating
+    on well-formed `CsrPlanes`).  Instead of ``deg_cap``-wide segment
+    gathers, the oracle bit-tests the whole flat ``indices`` array once per
+    arc and reduces each row by a prefix-sum difference over its
+    ``[seg_start, seg_start + seg_len)`` span — ``O(nnz)`` transient per
+    arc, sequential over arcs (``lax.map``), and vmappable over a pattern
+    batch (the scalar-prefetch kernel is not).
+    """
+    n_idx = indices.shape[0]
+    w = masks.shape[1]
+    sl = jnp.minimum(seg_len, deg_cap)
+    u_c = jnp.clip(indices, 0, w * 32 - 1)
+    word = u_c // 32
+    bit = (u_c % 32).astype(jnp.uint32)
+    node_ok = (indices >= 0) & (indices < w * 32)  # sentinel tail drops out
+
+    def one(x):
+        r, m = x
+        hits = jnp.where(node_ok, ((m[word] >> bit) & jnp.uint32(1)).astype(jnp.int32), 0)
+        c = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(hits)])
+        lo = jnp.clip(seg_start[r], 0, n_idx)
+        hi = jnp.clip(seg_start[r] + sl[r], lo, n_idx)
+        return ((c[hi] - c[lo]) > 0).astype(jnp.int32)
+
+    return lax.map(one, (arc_row, masks))
+
+
 def popcount_rows_ref(bits: jnp.ndarray) -> jnp.ndarray:
     """Per-row popcount of ``[n, w]`` uint32 bitmaps -> ``[n]`` int32."""
     return jnp.sum(lax.population_count(bits), axis=-1).astype(jnp.int32)

@@ -20,7 +20,10 @@ Pallas ``extend_step`` kernel (DESIGN.md §6.2) — results are bit-identical
 to the default ``jnp`` backend; off-TPU the kernel runs in interpret mode
 (validation, not speed — see API.md).  ``--step-backend csr`` runs the
 sparse CSR walk (DESIGN.md §6.4; also bit-identical), ``auto`` picks csr
-past 32,768 target nodes.
+past 32,768 target nodes.  ``--sparse-index`` goes further: targets are
+indexed CSR-only (DESIGN.md §11), so dense adjacency bitmaps never exist
+anywhere — any ``--variant`` works, with domains from the CSR-native
+AC/FC fixpoint.
 
 ``--devices N`` runs the paper's worker sweep multi-device: the session's
 worker stacks shard over a 1-D ``data`` mesh of ``N`` devices
@@ -122,7 +125,19 @@ def main() -> int:
                     "'bucketed' trips each lane at its row's pow2 "
                     "degree-bucket cap, 'flat' scans every lane to the "
                     "global deg_cap (the pre-bucketing behavior)")
+    ap.add_argument("--sparse-index", action="store_true",
+                    help="build CSR-only target indexes (SubgraphIndex."
+                    "build(..., sparse=True), DESIGN.md §11): dense "
+                    "adjacency bitmaps never exist — domains come from the "
+                    "CSR-native AC/FC fixpoint and plans are CSR-only; "
+                    "requires --step-backend csr, auto, or partitioned")
     args = ap.parse_args()
+    if args.sparse_index and args.step_backend in ("jnp", "pallas"):
+        raise SystemExit(
+            f"--sparse-index builds CSR-only plans, which the dense "
+            f"'{args.step_backend}' backend cannot run; use --step-backend "
+            "csr, auto, or partitioned"
+        )
     mode = "packed" if args.packed else args.mode
     if args.partitions and args.step_backend != "partitioned":
         args.step_backend = "partitioned"
@@ -156,7 +171,9 @@ def main() -> int:
     for inst in instances:
         key = id(inst.target)
         if key not in indices:
-            indices[key] = SubgraphIndex.build(inst.target)
+            indices[key] = SubgraphIndex.build(
+                inst.target, sparse=args.sparse_index
+            )
         queries.append(session.prepare(
             inst.pattern, name=inst.name, index=indices[key],
             seed_edge="auto" if args.root_seeding != "vertex" else None))

@@ -31,7 +31,7 @@ from repro.core import EngineConfig, Enumerator, SubgraphIndex
 from repro.core import engine as eng
 from repro.core import extend
 from repro.core.graph import PackedGraph
-from repro.core.plan import build_csr_plan, build_plan
+from repro.core.plan import VARIANTS, build_csr_plan, build_plan
 from tests.conftest import (
     extract_connected_pattern,
     power_law_target,
@@ -141,7 +141,7 @@ def test_store_used_false_conformance(rng, backend):
     )
 
 
-@pytest.mark.parametrize("variant", ("ri", "ri-ds-si-fc", "ri-ds-si-acfc"))
+@pytest.mark.parametrize("variant", VARIANTS)
 def test_variant_conformance_csr(rng, variant):
     """Preprocessing variants change the plan, never the backend contract."""
     tgt, pat = _dense(rng)
@@ -569,3 +569,99 @@ def test_mesh_bucketed_walk_conformance(rng):
         eng.run(plan, _cfg("csr", csr_walk="flat"), mesh=mesh),
         eng.run(plan, _cfg("csr", csr_walk="bucketed"), mesh=mesh),
     )
+
+
+# ---------------------------------------------------------------------------
+# CSR-only plans: every variant x every sparse-capable backend (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("backend", ("csr", "partitioned"))
+def test_csr_only_variant_matrix(rng, backend, variant):
+    """``build_csr_plan`` under every variant: the CSR-native domain
+    pipeline (initial domains, AC, FC, the AC ⇄ FC joint fixpoint) yields
+    domains bit-identical to the dense-built plan's, and both sparse-capable
+    backends reproduce the dense ``jnp`` run's counts and sorted mappings
+    — with dense adjacency bitmaps never materialized."""
+    tgt, pat = _sparse_power_law(rng)
+    dense_plan = build_plan(pat, PackedGraph.from_graph(tgt), variant=variant)
+    sparse_plan = build_csr_plan(pat, tgt, variant=variant)
+    assert sparse_plan.adj_bits.shape[2] == 0  # nothing dense was built
+    np.testing.assert_array_equal(sparse_plan.dom_bits, dense_plan.dom_bits)
+    assert sparse_plan.order.tolist() == dense_plan.order.tolist()
+    ref = eng.run(dense_plan, _cfg("jnp", collect_matches=512))
+    if backend == "partitioned":
+        got = eng.run_partitioned(
+            sparse_plan, _part_cfg(2, collect_matches=512))
+    else:
+        got = eng.run(sparse_plan, _cfg("csr", collect_matches=512))
+    assert (got.matches, got.states) == (ref.matches, ref.states)
+    ref_maps = _sorted_mappings(ref.match_buf, pat.n)
+    assert len(ref_maps) == ref.matches  # ring large enough: nothing dropped
+    assert _sorted_mappings(got.match_buf, pat.n) == ref_maps
+
+
+# ---------------------------------------------------------------------------
+# sparse (CSR-only) sessions: routing, conformance, fail-fast validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_sparse_session_conformance(rng, variant):
+    """``Enumerator`` over ``SubgraphIndex.build(sparse=True)``: plans come
+    out CSR-only, and counts / states / sorted mappings equal the dense
+    session's under every variant."""
+    tgt, pat = _sparse_power_law(rng)
+    dense = Enumerator(SubgraphIndex.build(tgt), variant=variant,
+                       config=_cfg("jnp"))
+    sparse = Enumerator(SubgraphIndex.build(tgt, sparse=True), variant=variant,
+                        config=_cfg("csr"))
+    ref = dense.run(dense.prepare(pat))
+    qs = sparse.prepare(pat)
+    assert qs.plan.adj_bits.shape[2] == 0  # the session built a CSR-only plan
+    got = sparse.run(qs)
+    assert (got.matches, got.states) == (ref.matches, ref.states)
+    assert sorted(got.mappings()) == sorted(ref.mappings())
+
+
+def test_sparse_session_compile_cache(rng):
+    """Same-bucket queries against a sparse index share one compiled
+    engine, exactly like the dense session path."""
+    tgt, _ = _sparse_power_law(rng)
+    sparse = Enumerator(SubgraphIndex.build(tgt, sparse=True),
+                        config=_cfg("csr"))
+    r = np.random.default_rng(5)
+    p1 = extract_connected_pattern(r, tgt, 4)
+    p2 = extract_connected_pattern(r, tgt, 4)
+    sparse.run(sparse.prepare(p1))
+    sparse.run(sparse.prepare(p2))
+    info = sparse.cache_info()
+    assert info["compiles"] == 1 and info["cache_hits"] >= 1, info
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas"))
+def test_sparse_index_dense_backend_fails_fast(rng, backend):
+    """An explicitly dense step backend can never run a CSR-only plan: the
+    session must say so at prepare() time — naming the plan layout and the
+    valid backends — with zero compiles spent."""
+    tgt, pat = _sparse_power_law(rng)
+    enum = Enumerator(SubgraphIndex.build(tgt, sparse=True),
+                      config=_cfg(backend))
+    with pytest.raises(ValueError, match="CSR-only") as ei:
+        enum.prepare(pat)
+    msg = str(ei.value)
+    assert backend in msg          # names the offending backend
+    assert "'csr'" in msg and "'partitioned'" in msg  # and the valid ones
+    assert enum.cache_info()["compiles"] == 0
+
+
+def test_csr_only_query_dense_run_fails_fast(rng):
+    """The engine-cache entry point re-validates: running a CSR-only query
+    through a dense-configured session raises before compiling."""
+    tgt, pat = _sparse_power_law(rng)
+    idx = SubgraphIndex.build(tgt, sparse=True)
+    ok = Enumerator(idx, config=_cfg("csr"))
+    q = ok.prepare(pat)
+    dense = Enumerator(idx, config=_cfg("jnp"))
+    with pytest.raises(ValueError, match="CSR-only"):
+        dense.run(q)
+    assert dense.cache_info()["compiles"] == 0

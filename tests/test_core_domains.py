@@ -173,6 +173,41 @@ def test_device_fixpoint_matches_numpy(seed, selfloops, n_elabs, overflow):
         np.testing.assert_array_equal(a.bits, b.bits)
 
 
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    selfloops=st.integers(0, 3),
+    n_elabs=st.integers(1, 2),
+    overflow=st.booleans(),
+)
+def test_sparse_domains_match_dense(seed, selfloops, n_elabs, overflow):
+    """The CSR-native pipeline (``compute_domains_sparse``: host initial
+    domains + the CSR-segment device fixpoint, dense bitmaps never built)
+    equals the dense numpy oracle bit for bit in every pipeline mode
+    (DESIGN.md §11)."""
+    from repro.core.graph import n_words
+
+    rng = np.random.default_rng(seed)
+    tgt = random_graph(rng, 12, 24, n_labels=2, n_elabs=n_elabs,
+                       selfloops=selfloops)
+    pat = extract_connected_pattern(rng, tgt, 3)
+    if pat.m == 0:
+        return
+    if overflow:
+        pat = bump_edge_label(pat, int(rng.integers(pat.m)), n_elabs + 3)
+    packed = PackedGraph.from_graph(tgt)
+    w = n_words(tgt.n)
+    for use_ac, use_fc, interleave in PIPELINES:
+        a = dom_mod.compute_domains(
+            pat, packed, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+        )
+        b = dom_mod.compute_domains_sparse(
+            pat, tgt, w, use_ac=use_ac, use_fc=use_fc, interleave=interleave
+        )
+        assert a.satisfiable == b.satisfiable, (use_ac, use_fc, interleave)
+        np.testing.assert_array_equal(a.bits, b.bits)
+
+
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_device_batch_matches_numpy(seed):

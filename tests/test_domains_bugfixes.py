@@ -223,6 +223,50 @@ def test_device_pallas_interpret_matches_numpy(rng):
         np.testing.assert_array_equal(a.bits, o.bits)
 
 
+def test_sparse_domains_match_dense_fixed_seeds():
+    """``compute_domains_sparse`` == ``compute_domains``, bit for bit, on a
+    corpus with self-loops, multiple edge labels, and out-of-range labels,
+    for every pipeline mode — including the unsat rules (label overflow and
+    empty-domain zeroing), which the sparse path used to skip for variant
+    ``ri`` (DESIGN.md §11)."""
+    from repro.core.graph import n_words
+
+    checked_loops = checked_overflow = 0
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        tgt = random_graph(rng, 14, 30, n_labels=2, n_elabs=2,
+                           selfloops=seed % 3)
+        pat = extract_connected_pattern(rng, tgt, 3)
+        if pat.m == 0:
+            continue
+        if seed % 2:
+            pat = bump_edge_label(pat, int(rng.integers(pat.m)), 5)
+            checked_overflow += 1
+        if np.any(pat.src == pat.dst):
+            checked_loops += 1
+        packed = PackedGraph.from_graph(tgt)
+        w = n_words(tgt.n)
+        np.testing.assert_array_equal(
+            dom_mod.initial_domains_sparse(pat, tgt, w),
+            dom_mod.initial_domains(pat, packed),
+        )
+        for use_ac, use_fc, interleave in PIPELINES:
+            a = dom_mod.compute_domains(
+                pat, packed, use_ac=use_ac, use_fc=use_fc,
+                interleave=interleave,
+            )
+            b = dom_mod.compute_domains_sparse(
+                pat, tgt, w, use_ac=use_ac, use_fc=use_fc,
+                interleave=interleave,
+            )
+            assert a.satisfiable == b.satisfiable, (
+                seed, use_ac, use_fc, interleave,
+            )
+            np.testing.assert_array_equal(a.bits, b.bits)
+    # the sweep must actually exercise the rules under test
+    assert checked_overflow >= 2 and checked_loops >= 2
+
+
 def test_acfc_subset_and_states_fixed_seed():
     """Joint AC ⇄ FC fixpoint: domains ⊆ sequential AC → FC, matches equal,
     states never larger under the same ordering."""

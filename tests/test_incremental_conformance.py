@@ -236,6 +236,50 @@ def test_run_delta_rejects_stale_query(rng):
         enum.run_delta(q_old, ms, delta)
 
 
+def test_delta_reuses_edge_seeded_query_plan(rng):
+    """An edge-seeded query's plan *is* the anchor plan for its own seed
+    edge: ``run_delta`` must reuse it by identity instead of rebuilding an
+    equal plan (PR-9 follow-up), and the differential gate still holds on
+    the edge-seeded ordering."""
+    tgt, pat = _power_law(rng)
+    adds, rems = _sample_edits(rng, tgt, k_add=4, k_rem=3)
+    idx = SubgraphIndex.build(tgt)
+    enum = _enum(idx, "csr", root_seeding="auto")
+    q = enum.prepare(pat, seed_edge="auto")
+    assert q.plan.seed_edge is not None
+    ms_old = enum.run(q)
+    new_idx, delta = idx.update(add_edges=adds, remove_edges=rems)
+    q2 = enum.prepare(pat, index=new_idx, seed_edge="auto")
+    dm = enum.run_delta(q2, ms_old, delta)
+    fresh = enum.run(q2)
+    assert dm.matches == fresh.matches
+    assert dm.apply(ms_old) == sorted(as_node_mappings(fresh))
+    # the seed-edge anchor got the query plan itself, by identity; every
+    # other anchor got a rebuilt plan of its own
+    anchors = dict(enum._anchor_plans(q2))
+    seed = q2.plan.seed_edge
+    if seed in anchors:  # the seed edge survives unless the delta removed it
+        assert anchors[seed] is q2.plan
+    assert all(p is not q2.plan for a, p in anchors.items() if a != seed)
+
+
+def test_vertex_seeded_query_builds_all_anchor_plans(rng):
+    """Without a seed edge, no anchor can alias the query plan — the
+    documented fallback: every anchor gets its own rebuilt plan, all
+    sharing the query's padding and one DomainResult."""
+    tgt, pat = _dense(rng)
+    idx = SubgraphIndex.build(tgt)
+    enum = _enum(idx, "jnp")
+    q = enum.prepare(pat)
+    assert q.plan.seed_edge is None
+    anchors = dict(enum._anchor_plans(q))
+    assert anchors  # connected patterns always have edge triples
+    for aplan in anchors.values():
+        assert aplan is not q.plan
+        assert aplan.p_pad == q.plan.p_pad
+        assert aplan.max_parents == q.plan.max_parents
+
+
 # ---------------------------------------------------------------------------
 # satellite: edit edge cases (set semantics of update())
 # ---------------------------------------------------------------------------

@@ -76,6 +76,39 @@ def test_arc_any_sweep(rng, n_planes, n_t, w, n_arcs):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize(
+    "n_planes,n_t,w,n_arcs,deg_cap",
+    [(2, 4, 1, 2, 8), (4, 33, 2, 6, 8), (2, 300, 10, 9, 16), (6, 70, 3, 5, 32)],
+)
+def test_csr_arc_sweep(rng, n_planes, n_t, w, n_arcs, deg_cap):
+    """The CSR-segment scalar-prefetch sweep (one AC sweep's arcs over
+    sentinel-padded CSR segments) against the lax.map oracle — ragged
+    degrees, empty rows, and full-deg_cap rows included."""
+    degs = rng.integers(0, deg_cap + 1, (n_planes, n_t)).astype(np.int32)
+    nnz = int(degs.sum())
+    sentinel = np.int32(2**31 - 1)
+    indices = np.full(nnz + deg_cap, sentinel, np.int32)
+    seg_start = np.zeros((n_planes, n_t), np.int32)
+    off = 0
+    for p in range(n_planes):
+        for t in range(n_t):
+            seg_start[p, t] = off
+            d = int(degs[p, t])
+            indices[off:off + d] = rng.integers(0, n_t, d)
+            off += d
+    arc_row = rng.integers(0, n_planes, n_arcs).astype(np.int32)
+    masks = rng.integers(0, 2**32, (n_arcs, w), dtype=np.uint32)
+    got = ops.csr_arc_sweep(
+        jnp.asarray(seg_start), jnp.asarray(degs), jnp.asarray(indices),
+        jnp.asarray(arc_row), jnp.asarray(masks), deg_cap=deg_cap,
+    )
+    want = kref.csr_arc_sweep_ref(
+        jnp.asarray(seg_start), jnp.asarray(degs), jnp.asarray(indices),
+        jnp.asarray(arc_row), jnp.asarray(masks), deg_cap=deg_cap,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_pack_bits_roundtrip(rng):
     n, w = 70, 3
     flags = rng.integers(0, 2, n).astype(np.int32)
